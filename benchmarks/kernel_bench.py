@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: wall-time of the jitted XLA reference paths on
+CPU (the Pallas kernels are TPU-targeted; interpret mode is not a timing
+proxy) + derived roofline positioning for the TPU target."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.roofline import V5E
+from repro.core.tiling import choose_matmul_blocks
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def bench():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # matmul: measure CPU ref; derive TPU roofline position for chosen blocks
+    for m, k, n in ((512, 512, 512), (1024, 1024, 1024)):
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        f = jax.jit(ref.tiled_matmul)
+        us = _time(f, x, y)
+        flops = 2 * m * n * k
+        bm, bn, bk = choose_matmul_blocks(m, n, k)
+        oi = flops / (2 * (m * k + k * n + m * n))
+        tpu_roof = min(V5E.peak_flops, oi * V5E.hbm_bw)
+        rows.append((f"kernel.matmul.{m}", round(us, 1),
+                     f"blocks=({bm},{bn},{bk}),tpu_roof={tpu_roof/1e12:.0f}TF"))
+
+    # conv (the paper's op): CPU ref timing + OI
+    for hw, ci, co, kk in ((56, 64, 64, 3), (14, 256, 256, 3)):
+        x = jnp.asarray(rng.normal(size=(1, hw, hw, ci)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(kk, kk, ci, co)), jnp.float32)
+        f = jax.jit(lambda a, b: ref.stream_mac_conv(a, b, (1, 1), (1, 1)))
+        us = _time(f, x, w)
+        flops = 2 * hw * hw * co * kk * kk * ci
+        rows.append((f"kernel.conv.{hw}x{hw}x{ci}", round(us, 1),
+                     f"gflop={flops/1e9:.2f}"))
+
+    # attention
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    us = _time(jax.jit(lambda a: ref.flash_attention(a, a, a)), q)
+    rows.append(("kernel.attention.512", round(us, 1), "b1h8d64"))
+    return rows

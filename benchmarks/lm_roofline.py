@@ -1,0 +1,32 @@
+"""LM-suite roofline summary: reads the dry-run JSON artifacts (if the
+80-cell sweep has been run) and prints the three-term roofline per cell.
+Falls back to a note when artifacts are absent (benchmarks.run must work in
+a fresh checkout without the 512-device sweep)."""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "experiments", "dryrun")
+
+
+def bench():
+    rows = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return [("lm_roofline.missing", 0,
+                 "run `python -m repro.launch.dryrun --all --both-meshes` first")]
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, name)) as f:
+            rep = json.load(f)
+        if rep.get("skipped") or rep.get("error"):
+            continue
+        r = rep["roofline"]
+        cell = name[:-5]
+        lb = max(float(r["t_compute_s"]), float(r["t_memory_s"]),
+                 float(r["t_collective_s"]))
+        rows.append((f"lm.{cell}.step_lb_ms", round(lb * 1e3, 3),
+                     f"bound={r['bound']},mem={rep['memory']['per_device_GB']:.1f}GB"))
+    return rows

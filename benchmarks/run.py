@@ -1,0 +1,32 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  The paper-model benchmarks are
+analytic/simulated (the machine model is the measurement instrument, exactly
+as in the paper's epoch simulator); kernel benches time jitted XLA on the
+host; lm_roofline reads the dry-run artifacts.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, lm_roofline, paper_figs
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = dict(paper_figs.ALL)
+    suites["kernels"] = kernel_bench.bench
+    suites["lm_roofline"] = lm_roofline.bench
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        for rname, val, derived in rows:
+            print(f"{rname},{val},{derived}")
+        print(f"suite.{name}.total,{us:.0f},us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro — Neurostream (SMC PIM for ConvNets) reproduced as a TPU-native
+JAX framework: 4D-tiled streaming kernels, roofline-driven block selection,
+multi-pod distribution, and the paper's SMC performance/energy model."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+"""Config registry: assigned architectures + shape suites + paper ConvNets."""
+from .base import ArchConfig, all_archs, get_arch, register  # noqa: F401
+from .shapes import ALL_SHAPES, ShapeSuite, applicable  # noqa: F401
+
+_loaded = False
+
+
+def load_all() -> None:
+    global _loaded
+    if not _loaded:
+        from . import archs  # noqa: F401
+
+        _loaded = True
+
+
+load_all()
+from .archs import ASSIGNED  # noqa: F401,E402

@@ -1,0 +1,35 @@
+"""The four assigned input-shape suites (seq_len × global_batch).
+
+``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers the serving
+prefill; ``decode_32k``/``long_500k`` lower ``serve_step`` (one new token
+against a seq_len-deep cache).  ``long_500k`` only applies to sub-quadratic
+archs (SSM / hybrid) — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+TRAIN_4K = ShapeSuite("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSuite("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSuite("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSuite("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(arch_family: str, shape: ShapeSuite) -> bool:
+    if shape.name == "long_500k":
+        return arch_family in SUBQUADRATIC_FAMILIES
+    return True

@@ -1,0 +1,21 @@
+"""Core — the paper's contribution: 4D tiling, SMC machine model, roofline."""
+from .tiling import (  # noqa: F401
+    ConvLayerSpec,
+    Tile4D,
+    TilePerf,
+    VMemBudget,
+    choose_conv_blocks,
+    choose_matmul_blocks,
+    oi_for_tiles,
+    optimize_tile,
+    tile_candidates,
+    tile_spm_bytes,
+)
+from .smc import SMCConfig, SMCModel, SMCPower, simulate_smc_network  # noqa: F401
+from .roofline import (  # noqa: F401
+    V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze_compiled,
+    analyze_hlo_text,
+)

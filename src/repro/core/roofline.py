@@ -1,0 +1,493 @@
+"""Three-term roofline analysis of compiled HLO (deliverable g).
+
+The container is CPU-only; TPU v5e is the *target*.  We therefore derive the
+roofline terms structurally from the SPMD-partitioned compiled module
+(``compiled.as_text()`` — per-device shapes, collectives materialized):
+
+    compute term    = HLO_FLOPs(per device)        / peak_FLOP/s
+    memory term     = HLO_bytes(per device)        / HBM_bw
+    collective term = wire_bytes(per device, ring) / ICI_link_bw
+
+Two facts about XLA cost accounting (verified empirically in this repo):
+
+  * ``compiled.cost_analysis()`` is per-device **but counts while-loop bodies
+    once** — a 61-layer ``lax.scan`` shows up as one layer.  We parse the HLO
+    text instead and multiply loop-body costs by the trip count that XLA
+    records in ``backend_config={"known_trip_count":{"n":...}}``.
+  * Fusions are the HBM-traffic boundaries of the optimized module: we count
+    operand+result bytes of top-level instructions (fusion/dot/conv/...) and
+    nothing inside fused computations.
+
+Collective wire-bytes use ring cost models:
+    all-gather / reduce-scatter : (n-1)/n × full_bytes
+    all-reduce                  : 2(n-1)/n × full_bytes
+    all-to-all                  : (n-1)/n × full_bytes
+    collective-permute          : full_bytes
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e per-chip constants (assignment-specified)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16
+    hbm_bw: float = 819e9           # bytes/s
+    ici_bw: float = 50e9            # bytes/s per link
+    hbm_bytes: float = 16e9         # capacity
+
+V5E = HardwareSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# instruction opcodes that represent ~1 flop per output element
+_ELTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "rsqrt", "sqrt", "log", "negate", "abs",
+    "logistic", "cosine", "sine", "select", "compare", "and", "or", "xor",
+}
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (sums tuple elements)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    raw: str                      # full line (for attribute parsing)
+    operand_types: list[str] = field(default_factory=list)
+    operand_names: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list[Instruction] = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\],{}\d]+))\s+([\w\-]+)\("
+)
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    """Parse computations out of an HLO module dump. Returns (comps, entry)."""
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    comment = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        line = comment.sub("", line)
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                name = m.group(2).lstrip("%")
+                cur = Computation(name=name)
+                if m.group(1):
+                    entry = name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            iname, rtype, opcode = im.group(1), im.group(2), im.group(3)
+            # operand list: up to the matching close paren (no nesting in
+            # operand lists; attributes follow after "), ")
+            paren = line[im.end():]
+            depth, end = 1, len(paren)
+            for i, ch in enumerate(paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            oplist = paren[:end]
+            # inline types (small modules print them; large ones don't)
+            op_types = re.findall(r"(\w+\[[\d,]*\](?:\{[\d,]*\})?)\s+%", oplist)
+            op_names = [n.lstrip("%") for n in re.findall(r"%[\w.\-]+", oplist)]
+            cur.instructions.append(
+                Instruction(
+                    name=iname.lstrip("%"),
+                    result_type=rtype,
+                    opcode=opcode,
+                    raw=line,
+                    operand_types=op_types,
+                    operand_names=op_names,
+                )
+            )
+    if cur is not None:
+        comps[cur.name] = cur
+    # resolve operand types by name when not printed inline
+    for comp in comps.values():
+        types = {ins.name: ins.result_type for ins in comp.instructions}
+        for ins in comp.instructions:
+            if len(ins.operand_types) < len(ins.operand_names):
+                ins.operand_types = [
+                    types.get(n, "") for n in ins.operand_names
+                ]
+    return comps, entry
+
+
+def _attr(raw: str, key: str) -> str | None:
+    m = re.search(re.escape(key) + r"=(%?[\w.\-]+)", raw)
+    return m.group(1).lstrip("%") if m else None
+
+
+def _trip_count(raw: str, comps: dict[str, Computation], default: int = 1) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', raw)
+    if m:
+        return int(m.group(1))
+    # fallback: constant in the loop condition compared with LT
+    cond = _attr(raw, "condition")
+    if cond and cond in comps:
+        for ins in comps[cond].instructions:
+            if ins.opcode == "constant":
+                cm = re.search(r"constant\((\d+)\)", ins.raw)
+                if cm:
+                    return int(cm.group(1))
+    return default
+
+
+def _group_size(raw: str, n_devices: int) -> int:
+    """Participant count of a collective from replica_groups."""
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", raw)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", raw)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+def _dot_flops(ins: Instruction) -> float:
+    out = _shape_dims(ins.result_type)
+    out_elems = math.prod(out) if out else 1
+    lhs = _shape_dims(ins.operand_types[0]) if ins.operand_types else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    contract = 1
+    if m and m.group(1) and lhs:
+        for d in m.group(1).split(","):
+            contract *= lhs[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: Instruction) -> float:
+    out = _shape_dims(ins.result_type)
+    out_elems = math.prod(out) if out else 1
+    rhs = _shape_dims(ins.operand_types[1]) if len(ins.operand_types) > 1 else []
+    rhs_elems = math.prod(rhs) if rhs else 1
+    # output feature dim: from dim_labels ...->b01f etc: feature is 'f' in out
+    m = re.search(r"dim_labels=\w+_\w+->(\w+)", ins.raw)
+    o_feat = 1
+    if m and out:
+        lbl = m.group(1)
+        fi = lbl.index("f") if "f" in lbl else len(lbl) - 1
+        o_feat = out[fi]
+    # per-output-element contraction = prod(rhs)/O (groups fold in naturally)
+    return 2.0 * out_elems * rhs_elems / max(o_feat, 1)
+
+
+# ---------------------------------------------------------------------------
+# Cost walk
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HLOCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collectives: dict[str, float] = field(default_factory=dict)
+    collective_count: dict[str, int] = field(default_factory=dict)
+    dot_flops: float = 0.0
+    loop_trip_counts: list[int] = field(default_factory=list)
+    # byte attribution: (computation, opcode, result_type) -> bytes
+    attribution: dict = field(default_factory=dict)
+
+    def top_bytes(self, n: int = 10):
+        return sorted(self.attribution.items(), key=lambda kv: -kv[1])[:n]
+
+    def add_collective(self, kind: str, nbytes: float, mult: float) -> None:
+        self.wire_bytes += nbytes * mult
+        self.collectives[kind] = self.collectives.get(kind, 0.0) + nbytes * mult
+        self.collective_count[kind] = self.collective_count.get(kind, 0) + int(mult)
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _fusion_flops(comp: Computation, comps: dict[str, Computation]) -> float:
+    fl = 0.0
+    for ins in comp.instructions:
+        if ins.opcode == "dot":
+            fl += _dot_flops(ins)
+        elif ins.opcode == "convolution":
+            fl += _conv_flops(ins)
+        elif ins.opcode == "fusion":
+            callee = _attr(ins.raw, "calls")
+            if callee and callee in comps:
+                fl += _fusion_flops(comps[callee], comps)
+        elif ins.opcode in _ELTWISE:
+            dims = _shape_dims(ins.result_type)
+            fl += math.prod(dims) if dims else 1
+    return fl
+
+
+def _walk(
+    comp: Computation,
+    comps: dict[str, Computation],
+    mult: float,
+    cost: HLOCost,
+    n_devices: int,
+) -> None:
+    for ins in comp.instructions:
+        op = ins.opcode
+        if op == "while":
+            trip = _trip_count(ins.raw, comps)
+            cost.loop_trip_counts.append(trip)
+            body = _attr(ins.raw, "body")
+            if body and body in comps:
+                _walk(comps[body], comps, mult * trip, cost, n_devices)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for key in ("to_apply", "calls", "true_computation", "false_computation"):
+                callee = _attr(ins.raw, key)
+                if callee and callee in comps:
+                    _walk(comps[callee], comps, mult, cost, n_devices)
+            m = re.search(r"branch_computations=\{([^}]*)\}", ins.raw)
+            if m:
+                for callee in m.group(1).split(","):
+                    callee = callee.strip().lstrip("%")
+                    if callee in comps:
+                        _walk(comps[callee], comps, mult, cost, n_devices)
+            continue
+
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            n = _group_size(ins.raw, n_devices)
+            full = _shape_bytes(ins.result_type)
+            if base == "all-gather":
+                wire = (n - 1) / max(n, 1) * full
+            elif base == "reduce-scatter":
+                op_b = sum(_shape_bytes(t) for t in ins.operand_types) or full * n
+                wire = (n - 1) / max(n, 1) * op_b
+            elif base == "all-reduce":
+                wire = 2 * (n - 1) / max(n, 1) * full
+            elif base == "all-to-all":
+                wire = (n - 1) / max(n, 1) * full
+            else:  # collective-permute
+                wire = full
+            cost.add_collective(base, wire, mult)
+            # collectives also touch HBM
+            cost.hbm_bytes += (
+                _shape_bytes(ins.result_type)
+                + sum(_shape_bytes(t) for t in ins.operand_types)
+            ) * mult
+            continue
+
+        if op == "fusion":
+            callee = _attr(ins.raw, "calls")
+            if callee and callee in comps:
+                fl = _fusion_flops(comps[callee], comps)
+                cost.flops += fl * mult
+        elif op == "dot":
+            fl = _dot_flops(ins)
+            cost.flops += fl * mult
+            cost.dot_flops += fl * mult
+        elif op == "convolution":
+            fl = _conv_flops(ins)
+            cost.flops += fl * mult
+            cost.dot_flops += fl * mult
+        elif op in _ELTWISE or op in ("reduce", "reduce-window", "scatter", "gather", "sort"):
+            dims = _shape_dims(ins.result_type)
+            cost.flops += (math.prod(dims) if dims else 1) * mult
+
+        if op not in _SKIP_BYTES:
+            op_bytes = [_shape_bytes(t) for t in ins.operand_types]
+            nbytes = _shape_bytes(ins.result_type) + sum(op_bytes)
+            # in-place update ops: the big buffer is aliased on TPU — only
+            # the updated window moves (XLA in-place DUS); sliced reads only
+            # touch the slice.
+            if op == "dynamic-slice":
+                nbytes = 2 * _shape_bytes(ins.result_type)
+            elif op == "dynamic-update-slice":
+                upd = op_bytes[1] if len(op_bytes) > 1 else 0
+                nbytes = 2 * upd
+            elif op == "fusion" and op_bytes:
+                callee = _attr(ins.raw, "calls")
+                root = None
+                if callee and callee in comps and comps[callee].instructions:
+                    root = comps[callee].instructions[-1]
+                if root is not None and root.opcode == "dynamic-update-slice":
+                    big = max(op_bytes + [_shape_bytes(ins.result_type)])
+                    nbytes = max(nbytes - 2 * big, 0)
+            cost.hbm_bytes += nbytes * mult
+            key = (comp.name, op, ins.result_type[:48])
+            cost.attribution[key] = cost.attribution.get(key, 0.0) + nbytes * mult
+
+
+def analyze_hlo_text(text: str, n_devices: int) -> HLOCost:
+    comps, entry = parse_hlo(text)
+    cost = HLOCost()
+    if entry and entry in comps:
+        _walk(comps[entry], comps, 1.0, cost, n_devices)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Roofline report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineReport:
+    label: str
+    n_devices: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_global: float          # 6·N·D (or 6·N_active·D)
+    useful_ratio: float                # MODEL_FLOPS / (HLO flops × devices)
+    collectives: dict[str, float]
+    collective_count: dict[str, int]
+    xla_cost_analysis: dict
+    memory_per_device_bytes: float     # from memory_analysis
+    loop_trips: list[int]
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline this step could achieve if
+        perfectly overlapped: t_compute / max(all terms)."""
+        lb = self.step_time_lower_bound
+        return self.t_compute / lb if lb > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "label": self.label,
+            "devices": self.n_devices,
+            "flops/dev": f"{self.flops_per_device:.3e}",
+            "hbm_B/dev": f"{self.hbm_bytes_per_device:.3e}",
+            "wire_B/dev": f"{self.wire_bytes_per_device:.3e}",
+            "t_compute_s": f"{self.t_compute:.4e}",
+            "t_memory_s": f"{self.t_memory:.4e}",
+            "t_collective_s": f"{self.t_collective:.4e}",
+            "bound": self.dominant,
+            "useful_flop_ratio": f"{self.useful_ratio:.3f}",
+            "roofline_frac": f"{self.roofline_fraction:.3f}",
+            "mem/dev_GB": f"{self.memory_per_device_bytes/1e9:.2f}",
+        }
+
+
+def analyze_compiled(
+    compiled,
+    label: str,
+    n_devices: int,
+    model_flops: float = 0.0,
+    hw: HardwareSpec = V5E,
+) -> RooflineReport:
+    """Build the three-term roofline report from a compiled executable."""
+    text = compiled.as_text()
+    cost = analyze_hlo_text(text, n_devices)
+    try:
+        ca = dict(compiled.cost_analysis())
+    except Exception:
+        ca = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = (
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        )
+    except Exception:
+        mem = 0.0
+    t_comp = cost.flops / hw.peak_flops
+    t_mem = cost.hbm_bytes / hw.hbm_bw
+    t_coll = cost.wire_bytes / hw.ici_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total_hlo_flops = cost.flops * n_devices
+    return RooflineReport(
+        label=label,
+        n_devices=n_devices,
+        flops_per_device=cost.flops,
+        hbm_bytes_per_device=cost.hbm_bytes,
+        wire_bytes_per_device=cost.wire_bytes,
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        dominant=dominant,
+        model_flops_global=model_flops,
+        useful_ratio=(model_flops / total_hlo_flops) if total_hlo_flops else 0.0,
+        collectives=cost.collectives,
+        collective_count=cost.collective_count,
+        xla_cost_analysis={
+            k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca
+        },
+        memory_per_device_bytes=float(mem),
+        loop_trips=cost.loop_trip_counts,
+    )

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel module holds the ``pl.pallas_call`` + ``BlockSpec`` implementation;
+``ops.py`` is the jit'd public wrapper (auto-``interpret`` off-TPU); ``ref.py``
+is the pure-jnp oracle every kernel is validated against.
+"""

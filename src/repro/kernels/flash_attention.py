@@ -1,0 +1,137 @@
+"""Streaming-softmax (flash) attention kernel (Pallas, TPU target).
+
+The LM-suite hot spot, built from the same idea as STREAM_MAC: the kv
+sequence streams through VMEM in blocks while a resident accumulator holds
+the partial result (online softmax).  Supports causal masking, sliding-window
+(RecurrentGemma local attention), GQA/MQA head mapping via the BlockSpec
+index map, kv-length masking for padded caches, and a query-position offset
+for decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANE = 128
+
+
+def _attn_kernel(
+    q_ref,            # (1, 1, bq, D)
+    k_ref,            # (1, 1, bk, D)
+    v_ref,            # (1, 1, bk, D)
+    o_ref,            # (1, 1, bq, D)
+    acc_ref,          # (bq, D) f32
+    m_ref,            # (bq, _LANE) f32 (lane-replicated running max)
+    l_ref,            # (bq, _LANE) f32 (lane-replicated running sum)
+    *,
+    nk: int,
+    bq: int,
+    bk: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    kv_len: int,
+):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (bq, bk)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                        # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)                  # robust to all-masked blocks
+    alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+    l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30))[None, None].astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, H,   Sq, D)
+    k: jax.Array,                 # (B, Hkv, Sk, D)
+    v: jax.Array,                 # (B, Hkv, Sk, D)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    nq, nk = sq // block_q, sk // block_k
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    kv_len = kv_len if kv_len is not None else sk
+    kern = functools.partial(
+        _attn_kernel,
+        nk=nk, bq=block_q, bk=block_k, scale=scale, causal=causal,
+        window=window, q_offset=q_offset, kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, qi, ki: (b_, h_ // rep, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, qi, ki: (b_, h_ // rep, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, _LANE), jnp.float32),
+            pltpu.VMEM((block_q, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

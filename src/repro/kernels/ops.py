@@ -1,0 +1,168 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to kernel block granularity, selects block shapes
+through the 4D-tile optimizer (``core.tiling``), runs the kernel
+(``interpret=True`` automatically off-TPU), and unpads.  These are the ops the
+framework calls; ``ref.py`` holds the oracles tests compare against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import choose_matmul_blocks
+from . import flash_attention as _fa
+from . import ssd_scan as _ssd
+from . import stream_gd as _gd
+from . import stream_mac_conv as _conv
+from . import stream_maxpool as _mp
+from . import tiled_matmul as _mm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: bool | None) -> bool:
+    return (not _on_tpu()) if flag is None else flag
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block(size: int, pref: int, align: int = 8) -> int:
+    """Block size: ``pref`` when the dim is large, else the padded dim."""
+    if size >= pref:
+        return pref
+    return size + ((-size) % align)
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tiled_matmul(x: jax.Array, y: jax.Array, interpret: bool | None = None):
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = choose_matmul_blocks(m, n, k, dtype_bytes=x.dtype.itemsize)
+    bm, bn, bk = _block(m, bm), _block(n, bn, 128), _block(k, bk, 128)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bk), 1, bn)
+    out = _mm.tiled_matmul(xp, yp, bm, bn, bk, interpret=_interpret(interpret))
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "block_yo", "interpret")
+)
+def stream_mac_conv(
+    x: jax.Array,
+    w: jax.Array,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+    block_yo: int = 8,
+    interpret: bool | None = None,
+):
+    """NHWC conv with HWIO weights (the paper's CONV layer)."""
+    n, h, wd, ci = x.shape
+    kh, kw, _, co = w.shape
+    sy, sx = stride
+    py, px = padding
+    yo = (h + 2 * py - kh) // sy + 1
+    wo = (wd + 2 * px - kw) // sx + 1
+
+    bci = _block(ci, 128)
+    bco = _block(co, 128)
+    byo = min(block_yo, yo)
+    yo_p = yo + ((-yo) % byo)
+    h_need = (yo_p - 1) * sy + kh
+
+    xp = jnp.pad(x, ((0, 0), (py, max(py, h_need - h - py)), (px, px), (0, 0)))
+    xp = xp[:, :h_need]
+    xp = _pad_to(xp, 3, bci)
+    wp = _pad_to(_pad_to(w, 2, bci), 3, bco)
+    out = _conv.stream_mac_conv(
+        xp, wp, stride=stride, block_yo=byo, block_co=bco, block_ci=bci,
+        interpret=_interpret(interpret),
+    )
+    return out[:, :yo, :wo, :co]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride", "interpret"))
+def stream_maxpool(
+    x: jax.Array,
+    window: tuple[int, int],
+    stride: tuple[int, int],
+    interpret: bool | None = None,
+):
+    n, h, w, c = x.shape
+    bc = _block(c, 128)
+    xp = _pad_to(x, 3, bc)
+    out = _mp.stream_maxpool(
+        xp, window, stride, block_c=bc, interpret=_interpret(interpret)
+    )
+    return out[..., :c]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stream_gd(derivs: jax.Array, coeffs: jax.Array, interpret: bool | None = None):
+    """Eq. (1) update over arbitrary-shaped weights: derivs (J, *shape)."""
+    j = derivs.shape[0]
+    shape = derivs.shape[1:]
+    flat = derivs.reshape(j, -1)
+    m = flat.shape[1]
+    bm = _block(m, 1024, 128)
+    flat = _pad_to(flat, 1, bm)
+    out = _gd.stream_gd(flat, coeffs, block_m=bm, interpret=_interpret(interpret))
+    return out[:m].reshape(shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "q_offset", "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    dp = d + ((-d) % 128)
+    bq = min(block_q, sq + ((-sq) % 8))
+    bk = min(block_k, sk + ((-sk) % 128))
+    qp = _pad_to(_pad_to(q, 2, bq), 3, dp)
+    kp = _pad_to(_pad_to(k, 2, bk), 3, dp)
+    vp = _pad_to(_pad_to(v, 2, bk), 3, dp)
+    out = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, kv_len=sk, block_q=bq, block_k=bk,
+        interpret=_interpret(interpret),
+    )
+    return out[:, :, :sq, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, b, c, dt, a, chunk: int = 128, interpret: bool | None = None):
+    """Mamba-2 SSD sequence mix (VMEM-resident chunk kernel)."""
+    return _ssd.ssd_scan(xh, b, c, dt, a, chunk=chunk,
+                         interpret=_interpret(interpret))

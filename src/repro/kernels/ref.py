@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel (used by tests + interpret sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def stream_mac_conv(
+    x: jax.Array,           # (N, H, W, Ci)
+    w: jax.Array,           # (KH, KW, Ci, Co)
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+) -> jax.Array:
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=stride,
+        padding=((padding[0], padding[0]), (padding[1], padding[1])),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(x.dtype)
+
+
+def stream_maxpool(
+    x: jax.Array,           # (N, H, W, C)
+    window: tuple[int, int],
+    stride: tuple[int, int],
+) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        jax.lax.max,
+        (1, window[0], window[1], 1),
+        (1, stride[0], stride[1], 1),
+        "VALID",
+    )
+
+
+def stream_gd(derivs: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """Paper Eq. (1): W_i = sum_j C_j * W_i^{(j)}.  derivs: (J, ...), coeffs: (J,)."""
+    c = coeffs.reshape((-1,) + (1,) * (derivs.ndim - 1)).astype(jnp.float32)
+    return jnp.sum(c * derivs.astype(jnp.float32), axis=0).astype(derivs.dtype)
+
+
+def flash_attention(
+    q: jax.Array,           # (B, H, Sq, D)
+    k: jax.Array,           # (B, Hkv, Sk, D)
+    v: jax.Array,           # (B, Hkv, Sk, D)
+    causal: bool = True,
+    window: int | None = None,   # sliding window (RecurrentGemma local attn)
+    scale: float | None = None,
+    q_offset: int = 0,      # absolute position of q[0] (decode: cache length)
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan(xh, b, c, dt, a):
+    """Exact sequential SSD recurrence (oracle for kernels/ssd_scan)."""
+    bsz, sl, h, p = xh.shape
+    n = b.shape[-1]
+    xh32 = xh.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+
+    def step(state, xs):
+        x_t, b_t, c_t, dt_t = xs                    # (B,H,P),(B,N),(B,N),(B,H)
+        da = jnp.exp(dt_t * a[None])                # (B,H)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt_t, b_t, x_t)
+        y = jnp.einsum("bn,bhpn->bhp", c_t, state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init,
+        (xh32.swapaxes(0, 1), b32.swapaxes(0, 1), c32.swapaxes(0, 1),
+         dt32.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1).astype(xh.dtype)

@@ -1,0 +1,120 @@
+"""Pallas SSD (Mamba-2) chunk-scan kernel — the VMEM-resident answer to the
+§Perf cell-3 finding that the XLA lowering round-trips every chunk tensor
+through HBM.
+
+One grid step processes one (batch, chunk) tile entirely in VMEM:
+
+  * intra-chunk dual form with the decay factorization landed in
+    ``models/ssm.py`` (exp(seg_i−c)·exp(c−seg_j), H-free causal mask),
+  * the (H, P, N) inter-chunk state lives in a VMEM scratch accumulator and
+    never touches HBM between chunks — the paper's "partial computations"
+    (§IV-A) verbatim: resident partial state, streamed input tiles.
+
+HBM traffic = inputs + outputs + nothing else: the roofline lower bound.
+Grid order (B outer, NC inner) makes the state carry sequential per batch;
+the state scratch re-initializes at chunk 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    xh_ref,            # (1, Q, H, P)
+    b_ref,             # (1, Q, N)
+    c_ref,             # (1, Q, N)
+    dt_ref,            # (1, Q, H)   — post-softplus Δt
+    a_ref,             # (1, H)      — negative per-head decay rate
+    o_ref,             # (1, Q, H, P)
+    state_ref,         # scratch (H, P, N) f32 — the resident partial state
+    *,
+    nc: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xh = xh_ref[0].astype(jnp.float32)            # (Q, H, P)
+    bb = b_ref[0].astype(jnp.float32)             # (Q, N)
+    cc = c_ref[0].astype(jnp.float32)             # (Q, N)
+    dt = dt_ref[0].astype(jnp.float32)            # (Q, H)
+    a = a_ref[0].astype(jnp.float32)              # (H,)
+
+    da = dt * a[None, :]                          # (Q, H) log-decay
+    seg = jnp.cumsum(da, axis=0)                  # (Q, H)
+    q = xh.shape[0]
+
+    # ---- intra-chunk (factorized decay; (Q,Q) mask is H-free) -------------
+    c_mid = 0.5 * (seg[:1] + seg[-1:])            # (1, H)
+    e_out = jnp.exp(jnp.clip(seg - c_mid, -60.0, 60.0))      # (Q, H)
+    e_in = jnp.exp(jnp.clip(c_mid - seg, -60.0, 60.0))       # (Q, H)
+    z = dt[..., None] * xh * e_in[..., None]      # (Q, H, P)
+    scores = jax.lax.dot_general(
+        cc, bb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (Q, Q)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    sm = jnp.where(iq >= jq, scores, 0.0)
+    y_diag = jax.lax.dot_general(
+        sm, z.reshape(q, -1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(xh.shape) * e_out[..., None]
+
+    # ---- inter-chunk: contribution of the resident state ------------------
+    state = state_ref[...]                        # (H, P, N)
+    decay_in = jnp.exp(seg)                       # (Q, H) decay from chunk start
+    y_off = jnp.einsum(
+        "qn,hpn->qhp", cc, state, preferred_element_type=jnp.float32
+    ) * decay_in[..., None]
+
+    o_ref[...] = (y_diag + y_off)[None].astype(o_ref.dtype)
+
+    # ---- state update: S' = decay_chunk·S + Σ_j e^{seg_Q - seg_j} dt_j B_j x_j
+    chunk_decay = jnp.exp(seg[-1])                # (H,)
+    decay_to_end = jnp.exp(seg[-1:] - seg)        # (Q, H)
+    zt = (dt * decay_to_end)[..., None] * xh      # (Q, H, P)
+    new_contrib = jnp.einsum(
+        "qhp,qn->hpn", zt, bb, preferred_element_type=jnp.float32
+    )
+    state_ref[...] = state * chunk_decay[:, None, None] + new_contrib
+
+
+def ssd_scan(
+    xh: jax.Array,       # (B, S, H, P)
+    b: jax.Array,        # (B, S, N)
+    c: jax.Array,        # (B, S, N)
+    dt: jax.Array,       # (B, S, H) — post-softplus
+    a: jax.Array,        # (H,) — negative decay rates (-exp(a_log))
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, S, H, P): the SSD sequence mix (no D-skip, no gating —
+    those stay in the jnp layer)."""
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    kern = functools.partial(_ssd_kernel, nc=nc)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, h), lambda bi, ci: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(xh.shape, xh.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xh, b, c, dt, a[None])

@@ -1,0 +1,44 @@
+"""STREAM_GD n-term gradient-descent update (Pallas, TPU target) — Eq. (1).
+
+    W_i = Σ_{j=0}^{n-1} C_j · W_i^{(j)}
+
+The paper implements SGD/BGD weight updates as a streaming weighted sum over
+the SPM (Fig 6b).  Here the J derivative streams are a stacked (J, M) array
+walked block-by-block; the per-batch constants C_j live in SMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gd_kernel(c_ref, d_ref, o_ref):
+    d = d_ref[...]                                  # (J, bm)
+    acc = jnp.zeros((1, d.shape[1]), jnp.float32)
+    for j in range(d.shape[0]):                     # J is small & static
+        acc += c_ref[j, 0] * d[j][None].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stream_gd(
+    derivs: jax.Array,      # (J, M) — row j is W^{(j)} (weights, grads, ...)
+    coeffs: jax.Array,      # (J,)
+    block_m: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    j, m = derivs.shape
+    assert m % block_m == 0
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _gd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((j, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((j, block_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m), derivs.dtype),
+        interpret=interpret,
+    )(coeffs.reshape(j, 1).astype(jnp.float32), derivs)[0]

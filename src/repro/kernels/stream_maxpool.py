@@ -1,0 +1,55 @@
+"""STREAM_MAXPL max-pooling kernel (Pallas, TPU target) — paper Fig 6a.
+
+The NST runs the same hardware-loop state machine as STREAM_MAC with the MAC
+replaced by Max.  Here the (ky, kx) window loops unroll around a vectorized
+``jnp.maximum`` over a channels-minor block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, kh, kw, sy, sx, ho, wo):
+    xt = x_ref[0]                     # (H, W, bc)
+    acc = None
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = jax.lax.slice(
+                xt,
+                (dy, dx, 0),
+                (dy + (ho - 1) * sy + 1, dx + (wo - 1) * sx + 1, xt.shape[2]),
+                (sy, sx, 1),
+            )
+            acc = patch if acc is None else jnp.maximum(acc, patch)
+    o_ref[...] = acc[None]
+
+
+def stream_maxpool(
+    x: jax.Array,                     # (N, H, W, C)
+    window: tuple[int, int],
+    stride: tuple[int, int],
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n, h, w, c = x.shape
+    kh, kw = window
+    sy, sx = stride
+    ho = (h - kh) // sy + 1
+    wo = (w - kw) // sx + 1
+    assert c % block_c == 0
+    grid = (n, c // block_c)
+    kern = functools.partial(
+        _maxpool_kernel, kh=kh, kw=kw, sy=sy, sx=sx, ho=ho, wo=wo
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, h, w, block_c), lambda n_, c_: (n_, 0, 0, c_))],
+        out_specs=pl.BlockSpec((1, ho, wo, block_c), lambda n_, c_: (n_, 0, 0, c_)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,56 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Reduced config on CPU; the production mesh path is proven by the dry-run's
+prefill/decode cells.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.dist.sharding import arch_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch).reduced()
+    mesh = make_host_mesh()
+    rules = arch_rules(cfg, mesh, step="decode", global_batch=args.slots)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    with jax.set_mesh(mesh):
+        eng = ServeEngine(
+            model, params,
+            EngineConfig(batch_slots=args.slots, max_len=args.max_len), rules,
+        )
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            eng.submit(Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32),
+                max_new_tokens=args.max_new,
+                temperature=args.temperature,
+            ))
+        t0 = time.time()
+        done = eng.run(key=jax.random.key(1))
+        dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"{cfg.name}: {len(done)} requests, {toks} tokens, "
+          f"{toks/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate: all assigned architecture families."""
+from .api import VLM, build_model, input_specs  # noqa: F401
+from .common import AxisRules, DEFAULT_RULES, PSpec  # noqa: F401
+from .encdec import EncDecLM  # noqa: F401
+from .transformer import DecoderLM  # noqa: F401

@@ -1,0 +1,178 @@
+"""Attention math: XLA streaming (chunked online-softmax) implementation for
+lowering/dry-run + dispatch to the Pallas flash kernel on TPU.
+
+Layout convention: q (B, Sq, H, D), k/v (B, Sk, Hkv, D).  GQA is computed
+grouped — kv heads are never materialized ``repeat``-ed.  The chunked scan is
+the same streaming-accumulator dataflow as ``kernels/flash_attention`` (and as
+the paper's STREAM_MAC partial sums), expressed in ``lax.scan`` so XLA:CPU/TPU
+can compile it without a Pallas backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int | None, kv_len):
+    m = kpos[None, :] < kv_len
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m            # (Sq, Sk_chunk)
+
+
+def flash_attention_xla(
+    q: jax.Array,                  # (B, Sq, H, D)
+    k: jax.Array,                  # (B, Sk, Hkv, D)
+    v: jax.Array,                  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_positions: jax.Array | None = None,   # (Sq,) absolute positions
+    kv_len: jax.Array | int | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Nested-chunk streaming attention (the Pallas kernel's dataflow in
+    pure lax): outer map over q blocks, inner scan over kv blocks with an
+    online-softmax accumulator.  The per-q-block function is checkpointed so
+    training memory is O(block²) transient, not O(seq²) resident.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = h // hkv
+    scale = scale if scale is not None else float(d) ** -0.5
+    kv_len = kv_len if kv_len is not None else sk
+    qpos = (
+        q_positions if q_positions is not None else jnp.arange(sq, dtype=jnp.int32)
+    )
+    kchunk = min(chunk, sk)
+    nk = (sk + kchunk - 1) // kchunk
+    kpad = nk * kchunk - sk
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nk, kchunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kchunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    kpos_all = jnp.arange(nk * kchunk, dtype=jnp.int32).reshape(nk, kchunk)
+
+    qchunk = min(chunk, sq)
+    nq = (sq + qchunk - 1) // qchunk
+    qpad = nq * qchunk - sq
+    qf = (q.reshape(b, sq, hkv, rep, d) * scale).astype(jnp.float32)
+    if qpad:
+        qf = jnp.pad(qf, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, qpad))
+    qcs = qf.reshape(b, nq, qchunk, hkv, rep, d).transpose(1, 0, 2, 3, 4, 5)
+    qpos_cs = qpos.reshape(nq, qchunk)
+
+    @jax.checkpoint
+    def per_q(args):
+        qc, qp = args                              # (B,qc,Hkv,rep,D), (qc,)
+
+        def step(carry, xs):
+            m_run, l_run, acc = carry
+            kb, vb, kpos = xs                      # (B,c,Hkv,D), (c,)
+            s = jnp.einsum(
+                "bqgrd,bkgd->bgrqk", qc.astype(kb.dtype), kb,
+                preferred_element_type=jnp.float32,
+            )                                      # (B,Hkv,rep,qc,c)
+            msk = _mask(qp, kpos, causal, window, kv_len)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, hkv, rep, qchunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, rep, qchunk), jnp.float32),
+            jnp.zeros((b, hkv, rep, qchunk, d), jnp.float32),
+        )
+        (m_run, l_run, acc), _ = jax.lax.scan(step, init, (kc, vc, kpos_all))
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)       # (B,qc,Hkv,rep,D)
+
+    if nq == 1:
+        out = per_q((qcs[0], qpos_cs[0]))
+    else:
+        outs = jax.lax.map(per_q, (qcs, qpos_cs))  # (nq,B,qc,Hkv,rep,D)
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+            b, nq * qchunk, hkv, rep, d
+        )
+    out = out.reshape(b, -1, h, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                  # (B, 1, H, D)
+    k: jax.Array,                  # (B, Smax, Hkv, D) — cache
+    v: jax.Array,
+    *,
+    position: jax.Array,           # scalar: index of the new token
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly padded) KV cache."""
+    b, _, h, d = q.shape
+    _, smax, hkv, _ = k.shape
+    rep = h // hkv
+    scale = scale if scale is not None else float(d) ** -0.5
+    # no materialized f32 cast of the cache: bf16 reads, f32 MXU accumulate
+    qf = (q.reshape(b, hkv, rep, d) * scale).astype(k.dtype)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qf, k,
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(smax, dtype=jnp.int32)
+    msk = kpos <= position                       # (Smax,)
+    if window is not None:
+        msk &= (position - kpos) < window
+    s = jnp.where(msk[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attend(
+    q, k, v, *,
+    causal=True, window=None, scale=None, q_positions=None, kv_len=None,
+    impl: str = "xla", chunk: int = 1024,
+) -> jax.Array:
+    """Dispatch: 'xla' (chunked scan — default, compiles everywhere),
+    'pallas' (the kernels/flash_attention TPU kernel; interpret off-TPU),
+    'naive' (materialized logits — small shapes only)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        off = 0
+        if q_positions is not None:
+            off = int(q_positions[0]) if not isinstance(q_positions, jax.core.Tracer) else 0
+        return kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=causal, window=window, scale=scale, q_offset=off,
+        ).transpose(0, 2, 1, 3)
+    if impl == "naive":
+        from repro.kernels import ref
+
+        return ref.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=causal, window=window, scale=scale,
+            q_offset=0 if q_positions is None else q_positions[0],
+        ).transpose(0, 2, 1, 3)
+    return flash_attention_xla(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_positions=q_positions, kv_len=kv_len, chunk=chunk,
+    )

@@ -1,0 +1,272 @@
+"""Whisper-style encoder/decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed mel-frame embeddings (B, n_ctx, d_model); everything downstream
+(sinusoidal encoder positions, learned decoder positions, LayerNorm-with-bias
+blocks, causal self + cross attention, tied head) is implemented in full.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attend, decode_attention
+from .common import (
+    AxisRules,
+    DEFAULT_RULES,
+    PSpec,
+    abstract_params,
+    constrain,
+    init_params,
+    layer_norm,
+    sinusoidal_positions,
+)
+
+
+def _ln(d):
+    return {
+        "w": PSpec((d,), ("embed",), jnp.float32, "ones"),
+        "b": PSpec((d,), ("embed",), jnp.float32, "zeros"),
+    }
+
+
+def _attn_specs(cfg):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dt = cfg.jdtype
+    return {
+        "wq": PSpec((d, h * hd), ("embed", "heads"), dt),
+        "bq": PSpec((h * hd,), ("heads",), dt, "zeros"),
+        "wk": PSpec((d, h * hd), ("embed", "heads"), dt),
+        "wv": PSpec((d, h * hd), ("embed", "heads"), dt),
+        "bv": PSpec((h * hd,), ("heads",), dt, "zeros"),
+        "wo": PSpec((h * hd, d), ("heads", "embed"), dt),
+        "bo": PSpec((d,), ("embed",), dt, "zeros"),
+    }
+
+
+def _mlp_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jdtype
+    return {
+        "fc1": PSpec((d, f), ("embed", "ffn"), dt),
+        "b1": PSpec((f,), ("ffn",), dt, "zeros"),
+        "fc2": PSpec((f, d), ("ffn", "embed"), dt),
+        "b2": PSpec((d,), ("embed",), dt, "zeros"),
+    }
+
+
+def _enc_layer_specs(cfg):
+    return {"ln1": _ln(cfg.d_model), "attn": _attn_specs(cfg),
+            "ln2": _ln(cfg.d_model), "mlp": _mlp_specs(cfg)}
+
+
+def _dec_layer_specs(cfg):
+    return {"ln1": _ln(cfg.d_model), "attn": _attn_specs(cfg),
+            "lnx": _ln(cfg.d_model), "cross": _attn_specs(cfg),
+            "ln2": _ln(cfg.d_model), "mlp": _mlp_specs(cfg)}
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        tree, is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def _proj_qkv(cfg, p, xq, xkv):
+    b, sq, d = xq.shape
+    skv = xkv.shape[1]
+    h, hd = cfg.n_heads, cfg.hd
+    q = (xq @ p["wq"] + p["bq"]).reshape(b, sq, h, hd)
+    k = (xkv @ p["wk"]).reshape(b, skv, h, hd)
+    v = (xkv @ p["wv"] + p["bv"]).reshape(b, skv, h, hd)
+    return q, k, v
+
+
+def _attn(cfg, p, xq, xkv, rules, causal, impl, positions=None):
+    b, sq, d = xq.shape
+    q, k, v = _proj_qkv(cfg, p, xq, xkv)
+    q = constrain(q, rules, "batch", "seq", "act_heads", None)
+    out = attend(q, k, v, causal=causal, q_positions=positions,
+                 impl=impl, chunk=cfg.attn_chunk)
+    return out.reshape(b, sq, -1) @ p["wo"] + p["bo"], (k, v)
+
+
+def _mlp(cfg, p, x, rules):
+    h = jax.nn.gelu(x @ p["fc1"] + p["b1"], approximate=True)
+    h = constrain(h, rules, "batch", "seq", "ffn")
+    return h @ p["fc2"] + p["b2"]
+
+
+def _lnorm(p, x, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+class EncDecLM:
+    """Whisper-family model with the DecoderLM-compatible serving API."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self):
+        cfg = self.cfg
+        dt = cfg.jdtype
+        return {
+            "embed": PSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), dt,
+                           scale=1.0),
+            "pos_dec": PSpec((cfg.max_position, cfg.d_model), (None, "embed"), dt,
+                             scale=0.02),
+            "enc_ln_post": _ln(cfg.d_model),
+            "dec_ln_post": _ln(cfg.d_model),
+            "enc": _stack(_enc_layer_specs(cfg), cfg.encoder.n_layers),
+            "dec": _stack(_dec_layer_specs(cfg), cfg.n_layers),
+        }
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # -- encoder ------------------------------------------------------------
+
+    def encode(self, params, frames, rules, impl="xla"):
+        cfg = self.cfg
+        x = frames.astype(cfg.jdtype)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x = constrain(x, rules, "batch", "seq", "act_embed")
+
+        def body(h, p):
+            a, _ = _attn(cfg, p["attn"], _lnorm(p["ln1"], h, cfg.norm_eps),
+                         _lnorm(p["ln1"], h, cfg.norm_eps), rules, False, impl)
+            h = h + a
+            h = h + _mlp(cfg, p["mlp"], _lnorm(p["ln2"], h, cfg.norm_eps), rules)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["enc"])
+        return _lnorm(params["enc_ln_post"], x, cfg.norm_eps)
+
+    # -- decoder ------------------------------------------------------------
+
+    def _dec_embed(self, params, tokens, pos0):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = jax.lax.dynamic_slice_in_dim(
+            params["pos_dec"], pos0, tokens.shape[1], axis=0
+        )
+        return x + pos[None]
+
+    def forward(self, params, tokens, rules=None, impl="xla", frames=None,
+                extra_embeds=None):
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        frames = frames if frames is not None else extra_embeds
+        enc = self.encode(params, frames, rules, impl)
+        x = self._dec_embed(params, tokens, 0)
+        x = constrain(x, rules, "batch", "seq", "act_embed")
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def body(h, p):
+            a, _ = _attn(cfg, p["attn"], _lnorm(p["ln1"], h, cfg.norm_eps),
+                         _lnorm(p["ln1"], h, cfg.norm_eps), rules, True, impl,
+                         positions)
+            h = h + a
+            c, _ = _attn(cfg, p["cross"], _lnorm(p["lnx"], h, cfg.norm_eps),
+                         enc, rules, False, impl)
+            h = h + c
+            h = h + _mlp(cfg, p["mlp"], _lnorm(p["ln2"], h, cfg.norm_eps), rules)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["dec"])
+        x = _lnorm(params["dec_ln_post"], x, cfg.norm_eps)
+        logits = x @ params["embed"].T.astype(x.dtype)
+        return constrain(logits, rules, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, rules=None, impl="xla"):
+        rules = rules or AxisRules(DEFAULT_RULES)
+        logits, _ = self.forward(
+            params, batch["tokens"], rules, impl, frames=batch["frames"]
+        )
+        cfg = self.cfg
+        if cfg.padded_vocab != cfg.vocab_size:
+            col = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+            logits = jnp.where(col[None, None], -1e30, logits.astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    # -- serving ------------------------------------------------------------
+
+    def prefill(self, params, tokens, rules=None, impl="xla", frames=None,
+                extra_embeds=None, max_len=None):
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        frames = frames if frames is not None else extra_embeds
+        enc = self.encode(params, frames, rules, impl)
+        x = self._dec_embed(params, tokens, 0)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def body(h, p):
+            hq = _lnorm(p["ln1"], h, cfg.norm_eps)
+            a, (k, v) = _attn(cfg, p["attn"], hq, hq, rules, True, impl, positions)
+            h = h + a
+            c, (ck, cv) = _attn(cfg, p["cross"], _lnorm(p["lnx"], h, cfg.norm_eps),
+                                enc, rules, False, impl)
+            h = h + c
+            h = h + _mlp(cfg, p["mlp"], _lnorm(p["ln2"], h, cfg.norm_eps), rules)
+            return h, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+        x, cache = jax.lax.scan(body, x, params["dec"])
+        x = _lnorm(params["dec_ln_post"], x[:, -1:], cfg.norm_eps)
+        logits = x @ params["embed"].T.astype(x.dtype)
+        return logits, [cache]
+
+    def decode_step(self, params, cache, tokens, position, rules=None):
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        x = self._dec_embed(params, tokens, position)
+        cache = cache[0]
+
+        def body(h, xs):
+            p, cs = xs
+            hq = _lnorm(p["ln1"], h, cfg.norm_eps)
+            q, k, v = _proj_qkv(cfg, p["attn"], hq, hq)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cs["k"], k.astype(cs["k"].dtype), position, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cs["v"], v.astype(cs["v"].dtype), position, axis=1)
+            kc = constrain(kc, rules, "batch", "cache_seq", None, None)
+            vc = constrain(vc, rules, "batch", "cache_seq", None, None)
+            a = decode_attention(q, kc, vc, position=position)
+            h = h + (a.reshape(h.shape[0], 1, -1) @ p["attn"]["wo"] + p["attn"]["bo"])
+            # cross attention against the precomputed encoder kv
+            hx = _lnorm(p["lnx"], h, cfg.norm_eps)
+            qx = (hx @ p["cross"]["wq"] + p["cross"]["bq"]).reshape(
+                h.shape[0], 1, cfg.n_heads, cfg.hd)
+            cx = decode_attention(qx, cs["ck"], cs["cv"],
+                                  position=jnp.asarray(cs["ck"].shape[1] - 1))
+            h = h + (cx.reshape(h.shape[0], 1, -1) @ p["cross"]["wo"]
+                     + p["cross"]["bo"])
+            h = h + _mlp(cfg, p["mlp"], _lnorm(p["ln2"], h, cfg.norm_eps), rules)
+            return h, {"k": kc, "v": vc, "ck": cs["ck"], "cv": cs["cv"]}
+
+        x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+        x = _lnorm(params["dec_ln_post"], x, cfg.norm_eps)
+        logits = x @ params["embed"].T.astype(x.dtype)
+        return logits, [new_cache]
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        h, hd = cfg.n_heads, cfg.hd
+        dt = cfg.jdtype
+        L = cfg.n_layers
+        nctx = cfg.encoder.n_ctx
+        return [{
+            "k": jax.ShapeDtypeStruct((L, batch, max_len, h, hd), dt),
+            "v": jax.ShapeDtypeStruct((L, batch, max_len, h, hd), dt),
+            "ck": jax.ShapeDtypeStruct((L, batch, nctx, h, hd), dt),
+            "cv": jax.ShapeDtypeStruct((L, batch, nctx, h, hd), dt),
+        }]

@@ -1,0 +1,149 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Q and KV are compressed to low-rank latents; the decode cache stores only the
+KV latent (+ the shared rotary key) — the paper's "partial computation"
+mechanism applied to attention state.  Decode uses the published
+weight-absorption form: queries are absorbed into latent space so the cache
+is never decompressed (scores = q_abs · latent + q_rope · k_rope; output =
+(attn · latent) · W_v^b).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, flash_attention_xla
+from .common import AxisRules, PSpec, constrain, rms_norm, rope
+
+
+def mla_specs(cfg) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.jdtype
+    qk = m.qk_nope_head_dim
+    qr = m.qk_rope_head_dim
+    vd = m.v_head_dim
+    return {
+        "wq_a": PSpec((d, m.q_lora_rank), ("embed", None), dt),
+        "q_norm": PSpec((m.q_lora_rank,), (None,), jnp.float32, "ones"),
+        # latent dims carry the FSDP axis ("latent" → data axes in train):
+        # unsharded dims would replicate these grads and all-reduce them
+        # across the fleet once PER MICROBATCH (measured 2.7e12 B/dev on
+        # deepseek train — see EXPERIMENTS.md §Perf)
+        "wq_b": PSpec((m.q_lora_rank, h * (qk + qr)), ("latent", "heads"), dt),
+        "wkv_a": PSpec((d, m.kv_lora_rank + qr), ("embed", None), dt),
+        "kv_norm": PSpec((m.kv_lora_rank,), (None,), jnp.float32, "ones"),
+        "wk_b": PSpec((m.kv_lora_rank, h * qk), ("latent", "heads"), dt),
+        "wv_b": PSpec((m.kv_lora_rank, h * vd), ("latent", "heads"), dt),
+        "wo": PSpec((h * vd, d), ("heads", "embed"), dt),
+    }
+
+
+def _project_q(cfg, p, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk, qr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    qa = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (qa @ p["wq_b"]).reshape(b, s, h, qk + qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = rope(q_rope, positions[None], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(cfg, p, x, positions):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]                                   # (B,S,rank+qr)
+    latent = rms_norm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., m.kv_lora_rank:], positions[None], cfg.rope_theta)
+    return latent, k_rope                                 # (B,S,rank),(B,S,qr)
+
+
+def mla_attention(
+    cfg, p, x, rules: AxisRules, positions, impl="xla",
+) -> tuple[jax.Array, dict]:
+    """Training / prefill path: decompress K,V per block (weights stream,
+    latents resident — streaming form).  Returns (out, cache)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    qk, qr, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    latent, k_rope = _latent_kv(cfg, p, x, positions)
+
+    k_nope = (latent @ p["wk_b"]).reshape(b, s, h, qk)
+    v = (latent @ p["wv_b"]).reshape(b, s, h, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, qr))], axis=-1)
+    q = constrain(q, rules, "batch", "seq", "act_heads", None)
+    k = constrain(k, rules, "batch", "seq", "act_heads", None)
+    scale = float(qk + qr) ** -0.5
+    # pad V head dim up to qk+qr so one attention primitive serves both
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk + qr - vd)))
+    out = flash_attention_xla(
+        q, k, vpad, causal=True, scale=scale, q_positions=positions,
+        chunk=cfg.attn_chunk,
+    )[..., :vd]
+    out = constrain(out, rules, "batch", "seq", "act_heads", None)
+    y = out.reshape(b, s, h * vd) @ p["wo"]
+    cache = {"latent": latent, "k_rope": k_rope}
+    return y, cache
+
+
+def mla_decode(
+    cfg, p, x, cache: dict, position, rules: AxisRules,
+) -> tuple[jax.Array, dict]:
+    """Absorbed decode: cache holds (latent, k_rope) only.
+
+    scores_h(t) = q_abs_h · latent_t + q_rope_h · k_rope_t
+    out_h       = (Σ_t a_t latent_t) · W_vb_h
+    """
+    m = cfg.mla
+    b, s1, d = x.shape                      # s1 == 1
+    h = cfg.n_heads
+    qk, qr, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    rank = m.kv_lora_rank
+    positions = jnp.full((1,), position, jnp.int32)
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)     # (B,1,H,qk/qr)
+    new_latent, new_krope = _latent_kv(cfg, p, x, positions)
+
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], new_latent.astype(cache["latent"].dtype), position, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], new_krope.astype(cache["k_rope"].dtype), position, axis=1
+    )
+    latent = constrain(latent, rules, "batch", "cache_seq", None)
+
+    wk_b = p["wk_b"].reshape(rank, h, qk)
+    # absorbed decode with bf16 cache reads + f32 accumulation (no
+    # materialized f32 copy of the latent cache)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32)   # (B,1,H,rank)
+    scale = float(qk + qr) ** -0.5
+    s_lat = jnp.einsum("bshr,btr->bhst", q_abs.astype(latent.dtype), latent,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshq,btq->bhst", q_rope.astype(k_rope.dtype), k_rope,
+                        preferred_element_type=jnp.float32)
+    s = (s_lat + s_rope) * scale                          # (B,H,1,Smax)
+    kpos = jnp.arange(latent.shape[1], dtype=jnp.int32)
+    s = jnp.where((kpos <= position)[None, None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", a.astype(latent.dtype), latent,
+                     preferred_element_type=jnp.float32)
+    wv_b = p["wv_b"].reshape(rank, h, vd)
+    out = jnp.einsum("bshr,rhv->bshv", ctx.astype(wv_b.dtype), wv_b,
+                     preferred_element_type=jnp.float32)
+    y = out.reshape(b, 1, h * vd).astype(x.dtype) @ p["wo"]
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+def mla_cache_spec(cfg, batch: int, max_len: int):
+    m = cfg.mla
+    dt = cfg.jdtype
+    return {
+        "latent": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_head_dim), dt),
+    }

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with grouped capacity-factor dispatch.
+
+Token-choice top-k routing (DeepSeek-V3 / Qwen3-MoE style) lowered as the
+GSPMD-friendly grouped einsum dispatch: tokens are split into G groups
+(aligned with the data-parallel shards), each group dispatches into
+per-expert capacity slots, and the expert contraction is sharded over the
+``model`` axis (expert parallelism).  XLA inserts the all-to-all between the
+group-sharded dispatch and the expert-sharded matmuls.
+
+This is the paper's 4D-tiling idea applied to experts: (group, token,
+expert, capacity) is the tile tuple, and the capacity slots are the
+"partial computation" buffers resident while T_Ci≙token blocks stream by.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import AxisRules, PSpec, activation, constrain
+
+
+def moe_specs(cfg) -> dict:
+    e, d = cfg.n_experts, cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    dt = cfg.jdtype
+    specs = {
+        "router": PSpec((d, e), ("embed", None), jnp.float32),
+        "w_gate": PSpec((e, d, f), ("experts", "embed", "expert_ffn"), dt),
+        "w_up": PSpec((e, d, f), ("experts", "embed", "expert_ffn"), dt),
+        "w_down": PSpec((e, f, d), ("experts", "expert_ffn", "embed"), dt),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        specs["shared"] = {
+            "w_gate": PSpec((d, fs), ("embed", "ffn"), dt),
+            "w_up": PSpec((d, fs), ("embed", "ffn"), dt),
+            "w_down": PSpec((fs, d), ("ffn", "embed"), dt),
+        }
+    return specs
+
+
+def _dispatch_masks(gates, k: int, capacity: int):
+    """Top-k token-choice dispatch/combine, per group.
+
+    gates: (G, T, E) router probabilities.
+    Returns dispatch (G, T, E, C) bool, combine (G, T, E, C) f32.
+    """
+    g, t, e = gates.shape
+    topw, topi = jax.lax.top_k(gates, k)                 # (G, T, k)
+    # renormalize the kept weights (deepseek-v3 / switch convention)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (G, T, k, E)
+    # position of each (token, slot) in its expert queue, counted over (T, k)
+    flat = onehot.reshape(g, t * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                # (G, T*k, E)
+    pos = pos.reshape(g, t, k, e)
+    within = (pos < capacity) & (onehot > 0)             # capacity drop
+    slot = jnp.einsum("gtke,gtke->gtk", pos, onehot.astype(pos.dtype))
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), capacity, dtype=jnp.float32)
+    keep = jnp.any(within, axis=-1)                      # (G, T, k)
+    kept = onehot * keep[..., None]                      # (G, T, k, E)
+    disp = jnp.einsum("gtke,gtkc->gtec", kept, slot_oh)  # 0/1 (G, T, E, C)
+    # per-slot router weights ride the combine tensor
+    comb = jnp.einsum("gtke,gtkc->gtec", kept * topw[..., None], slot_oh)
+    return disp, comb
+
+
+def aux_load_balance_loss(gates_mean: jax.Array, counts_mean: jax.Array, e: int):
+    """Switch-style load-balance loss: E * <p_e> . <f_e>."""
+    return e * jnp.sum(gates_mean * counts_mean)
+
+
+def moe_ffn(
+    cfg,
+    p: dict,
+    x: jax.Array,                   # (B, S, D)
+    rules: AxisRules,
+    n_groups: int | None = None,
+    drop: bool = True,              # False = inference (no capacity drops)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    f = cfg.moe_d_ff or cfg.d_ff
+    act = activation(cfg.act)
+
+    if n_groups is None:
+        # ~4k-token groups, but NEVER fewer groups than the 32 batch shards:
+        # an indivisible group count leaves the dispatch einsums partially
+        # replicated per device (measured 2x compute+memory on deepseek
+        # train — EXPERIMENTS.md §Perf).  The group is the 4D-tile T_Xi of
+        # the expert tiling; capacity buffers stay O(group²) bounded.
+        total = b * s
+        for cand in (max(32, total // 4096), total // 4096, 32, 16, 8, b, 1):
+            if cand and cand > 0 and total % cand == 0:
+                g = cand
+                break
+    else:
+        g = n_groups
+    assert (b * s) % g == 0
+    t = b * s // g
+    xt = x.reshape(g, t, d)
+    xt = constrain(xt, rules, "batch", None, "act_embed")
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    capacity = max(int(t * k * cfg.capacity_factor / e), 4) if drop else t
+    disp, comb = _dispatch_masks(gates, k, capacity)
+    disp = constrain(disp, rules, "batch", None, "experts", None)
+    comb = constrain(comb, rules, "batch", None, "experts", None)
+
+    # aux load-balance loss (mean gate prob vs mean dispatch fraction)
+    gates_mean = jnp.mean(gates, axis=(0, 1))
+    counts_mean = jnp.mean(jnp.sum(disp, axis=-1), axis=(0, 1)) * (e / k)
+    aux = aux_load_balance_loss(gates_mean, counts_mean, e) * cfg.router_aux_weight
+
+    # dispatch -> (G, E, C, D), sharded: G over data, E over model (EP)
+    xe = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xt)
+    xe = constrain(xe, rules, "batch", "experts", None, "act_embed")
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = act(h) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = constrain(ye, rules, "batch", "experts", None, "act_embed")
+    y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
+    y = y.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = act(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+    return y, aux

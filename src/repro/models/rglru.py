@@ -1,0 +1,110 @@
+"""RecurrentGemma (Griffin) RG-LRU recurrent block.
+
+    r_t = σ(block_diag(W_r) x_t);  i_t = σ(block_diag(W_i) x_t)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses an associative scan over (a, b) pairs — log-depth on the
+sequence; decode carries h directly.  The conv1d(4) + two-branch gating
+follows the Griffin recurrent block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import AxisRules, PSpec, constrain
+
+_C = 8.0          # Griffin's fixed scaling constant
+_NB = 16          # block-diagonal gate blocks
+
+
+def rglru_specs(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width
+    k = cfg.rglru.d_conv
+    dt = cfg.jdtype
+    bw = w // _NB
+    return {
+        "w_x": PSpec((d, w), ("embed", "lru"), dt),
+        "w_gate": PSpec((d, w), ("embed", "lru"), dt),
+        "conv_w": PSpec((k, w), (None, "lru"), dt),
+        "conv_b": PSpec((w,), ("lru",), dt, "zeros"),
+        "gate_r": PSpec((_NB, bw, bw), (None, None, "lru"), dt),
+        "gate_i": PSpec((_NB, bw, bw), (None, None, "lru"), dt),
+        "lambda_p": PSpec((w,), ("lru",), jnp.float32, "ones"),
+        "w_out": PSpec((w, d), ("lru", "embed"), dt),
+    }
+
+
+def _block_diag_gate(x, w):
+    """x: (B,S,W) → σ(x · blockdiag(w)), w: (NB, W/NB, W/NB)."""
+    b, s, width = x.shape
+    xb = x.reshape(b, s, _NB, width // _NB)
+    y = jnp.einsum("bsnw,nwv->bsnv", xb, w)
+    return jax.nn.sigmoid(y.reshape(b, s, width).astype(jnp.float32))
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        if state is None
+        else state
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    return y + b, (xp[:, -(k - 1):] if k > 1 else pad)
+
+
+def _gates(cfg, p, xc):
+    r = _block_diag_gate(xc, p["gate_r"])
+    i = _block_diag_gate(xc, p["gate_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda_p"]) * r       # (B,S,W) f32
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) computed stably in log space
+    b_scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, b_scale * i * xc.astype(jnp.float32)
+
+
+def rglru_block(cfg, p, x, rules: AxisRules, state=None, conv_state=None):
+    """x: (B,S,D) → (B,S,D).  Returns (y, cache{h, conv})."""
+    b, s, d = x.shape
+    xb = x @ p["w_x"]
+    gate_branch = jax.nn.gelu(x @ p["w_gate"])
+    xc, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    xc = constrain(xc, rules, "batch", "seq", "lru")
+
+    a, bx = _gates(cfg, p, xc)
+
+    # associative scan over (a, b): (a2, b2) ∘ (a1, b1) = (a1·a2, a2·b1 + b2)
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    if state is not None:
+        # fold the carried state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * state.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    h_last = h[:, -1]
+    y = (h.astype(x.dtype) * gate_branch) @ p["w_out"]
+    return y, {"h": h_last, "conv": new_conv}   # f32 state (tiny, sensitive)
+
+
+def rglru_decode(cfg, p, x, cache, rules: AxisRules):
+    """x: (B,1,D); O(1) state update."""
+    xb = x @ p["w_x"]
+    gate_branch = jax.nn.gelu(x @ p["w_gate"])
+    xc, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], cache["conv"])
+    a, bx = _gates(cfg, p, xc)
+    h = a[:, 0] * cache["h"].astype(jnp.float32) + bx[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate_branch) @ p["w_out"]
+    return y, {"h": h, "conv": new_conv}
+
+
+def rglru_cache_spec(cfg, batch: int):
+    w = cfg.rglru.lru_width
+    k = cfg.rglru.d_conv
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, k - 1, w), cfg.jdtype),
+    }

@@ -1,0 +1,227 @@
+"""Mamba-2 SSD (state-space duality) block — chunked form.
+
+The SSD chunked algorithm *is* the paper's 4D-tiling applied to a linear
+recurrence: the sequence is tiled into chunks; within a chunk the dual
+(attention-like) quadratic form runs on the MXU; across chunks a tiny
+recurrence carries the (heads, head_dim, state) partial state — exactly the
+"partial computations" mechanism of §IV-A with T_Ci ≙ chunk.
+
+Decode carries the state directly: h ← da·h + dt·B·x, y = C·h (O(1)/token).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import AxisRules, PSpec, constrain, rms_norm
+
+
+def ssm_specs(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    n = s.d_state
+    dt = cfg.jdtype
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": PSpec((d, 2 * di + 2 * n + nh), ("embed", "lru"), dt),
+        "conv_w": PSpec((s.d_conv, conv_dim), (None, "lru"), dt),
+        "conv_b": PSpec((conv_dim,), ("lru",), dt, "zeros"),
+        "a_log": PSpec((nh,), (None,), jnp.float32, "zeros"),
+        "d_skip": PSpec((nh,), (None,), jnp.float32, "ones"),
+        "dt_bias": PSpec((nh,), (None,), jnp.float32, "zeros"),
+        "norm": PSpec((di,), ("lru",), jnp.float32, "ones"),
+        "out_proj": PSpec((di, d), ("lru", "embed"), dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    n = s.d_state
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di: 2 * di]
+    bb = zxbcdt[..., 2 * di: 2 * di + n]
+    cc = zxbcdt[..., 2 * di + n: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d, width K.  x: (B,S,C), w: (K,C).
+
+    state: (B, K-1, C) trailing context for decode; returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_chunked(
+    cfg, xh, bb, cc, dt, a_log, d_skip, init_state=None,
+):
+    """SSD forward.  xh: (B,S,H,P); bb/cc: (B,S,N); dt: (B,S,H).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    s = cfg.ssm
+    b, sl, h, p = xh.shape
+    n = s.d_state
+    q = min(s.chunk, sl)
+    assert sl % q == 0, (sl, q)
+    nc = sl // q
+
+    a = -jnp.exp(a_log)                                    # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32))           # (B,S,H)
+    da = dt * a                                            # log decay
+    xf = xh.astype(jnp.float32)
+    bf = bb.astype(jnp.float32)
+    cf = cc.astype(jnp.float32)
+
+    # reshape into chunks
+    xc = xf.reshape(b, nc, q, h, p)
+    bc = bf.reshape(b, nc, q, n)
+    cc_ = cf.reshape(b, nc, q, n)
+    dac = da.reshape(b, nc, q, h)
+    dtc = dt.reshape(b, nc, q, h)
+
+    seg = jnp.cumsum(dac, axis=2)                          # (B,NC,Q,H)
+    iq = jnp.arange(q)
+    causal2d = (iq[:, None] >= iq[None, :])[None, None]    # (1,1,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc_, bc)        # (B,NC,Q,Q)
+    if s.factorized:
+        # §Perf: decay factorization — exp(seg_i - seg_j) = exp(seg_i - c)
+        # · exp(c - seg_j) with c = chunk midpoint.  The (Q,Q,H) decay
+        # tensor disappears; the causal mask stays (Q,Q) (H-free) and the
+        # per-head decays ride the (Q,H,·) operands.
+        c_mid = 0.5 * (seg[:, :, :1] + seg[:, :, -1:])     # (B,NC,1,H)
+        e_out = jnp.exp(jnp.clip(seg - c_mid, -60.0, 60.0))
+        e_in = jnp.exp(jnp.clip(c_mid - seg, -60.0, 60.0))
+        z = dtc[..., None] * xc * e_in[..., None]          # (B,NC,Q,H,P)
+        sm = jnp.where(causal2d, scores, 0.0)
+        y_diag = jnp.einsum("bcij,bcjhp->bcihp", sm, z) * e_out[..., None]
+    else:
+        # reference path: materialized (B,NC,Q,Q,H) decay (exact dual form)
+        diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]
+        l_mask = jnp.where(causal2d[..., None], jnp.exp(diff), 0.0)
+        y_diag = jnp.einsum(
+            "bcij,bcijh,bcjh,bcjhp->bcihp", scores, l_mask, dtc, xc
+        )
+
+    # chunk states: S_c = sum_j exp(seg_end - seg_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)        # (B,NC,Q,H)
+    states = jnp.einsum(
+        "bcjh,bcjh,bcjn,bcjhp->bchpn", decay_to_end, dtc, bc, xc
+    )                                                      # (B,NC,H,P,N)
+
+    # inter-chunk recurrence over the tiny state
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))            # (B,NC,H)
+
+    def scan_fn(carry, xs):
+        st, dec = xs
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state BEFORE chunk
+
+    init = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    final, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)               # (B,NC,H,P,N)
+
+    # inter-chunk contribution: C_i · (decay_from_start · S_prev)
+    decay_from_start = jnp.exp(seg)                        # (B,NC,Q,H)
+    y_off = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", cc_, decay_from_start, prev_states
+    )
+    y = (y_diag + y_off).reshape(b, sl, h, p)
+    y = y + d_skip[None, None, :, None] * xf
+    return y.astype(xh.dtype), final
+
+
+def ssm_block(cfg, p, x, rules: AxisRules, init_state=None, conv_state=None):
+    """Full Mamba-2 block.  x: (B,S,D) → (B,S,D).  Returns (y, cache)."""
+    s = cfg.ssm
+    b, sl, d = x.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    n = s.d_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xi, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xi, bb, cc = (
+        conv_out[..., :di],
+        conv_out[..., di: di + n],
+        conv_out[..., di + n:],
+    )
+    xh = xi.reshape(b, sl, nh, s.head_dim)
+    xh = constrain(xh, rules, "batch", "seq", "ssm_heads", None)
+    y, final = ssd_chunked(cfg, xh, bb, cc, dt, p["a_log"], p["d_skip"], init_state)
+    y = y.reshape(b, sl, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"state": final, "conv": new_conv}   # f32 state (tiny, sensitive)
+
+
+def ssm_decode(cfg, p, x, cache, rules: AxisRules):
+    """O(1) decode: recurrent state update.  x: (B,1,D)."""
+    s = cfg.ssm
+    b, _, d = x.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    n = s.d_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xi, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], cache["conv"])
+    xi, bb, cc = (
+        conv_out[..., :di],
+        conv_out[..., di: di + n],
+        conv_out[..., di + n:],
+    )
+    xh = xi.reshape(b, nh, s.head_dim).astype(jnp.float32)     # (B,H,P)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)).reshape(b, nh)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dtv * a)                                       # (B,H)
+    h_prev = cache["state"].astype(jnp.float32)                 # (B,H,P,N)
+    bf = bb.reshape(b, n).astype(jnp.float32)
+    cf = cc.reshape(b, n).astype(jnp.float32)
+    h_new = h_prev * da[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, bf, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cf, h_new)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rms_norm(
+        y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+        p["norm"], cfg.norm_eps,
+    )
+    out = y @ p["out_proj"]
+    return out, {"state": h_new, "conv": new_conv}
+
+
+def ssm_cache_spec(cfg, batch: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    nh, p, n = s.n_heads(d), s.head_dim, s.d_state
+    conv_dim = s.d_inner(d) + 2 * n
+    return {
+        "state": jax.ShapeDtypeStruct((batch, nh, p, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), cfg.jdtype),
+    }

@@ -1,0 +1,584 @@
+"""Decoder-only LM assembly for all assigned families.
+
+A model is a sequence of *segments*; each segment is a repeating *pattern* of
+sub-layer kinds scanned with stacked parameters (``lax.scan`` over the repeat
+dimension keeps the HLO one-pattern-deep regardless of depth — compile time
+and dry-run cost analysis both depend on this):
+
+    dense   : [("dense",) × L]
+    moe     : [("dense",) × first_dense] + [("moe",) × (L-first_dense)]
+    ssm     : [("ssm",) × L]
+    hybrid  : [("rec","rec","attn") × (L//3)] + remainder
+    vlm     : dense backbone + embedding injection (api.py)
+
+Each layer = pre-norm temporal mix (attention / MLA / SSD / RG-LRU)
++ residual [+ pre-norm MLP/MoE + residual].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import mla as _mla
+from . import moe as _moe
+from . import rglru as _rglru
+from . import ssm as _ssm
+from .attention import attend, decode_attention
+from .common import (
+    AxisRules,
+    DEFAULT_RULES,
+    PSpec,
+    abstract_params,
+    activation,
+    constrain,
+    init_params,
+    rms_norm,
+    rope,
+    stack_specs,
+)
+
+# ---------------------------------------------------------------------------
+# Sub-layer: GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    s = {
+        "wq": PSpec((d, h * hd), ("embed", "heads"), dt),
+        "wk": PSpec((d, hkv * hd), ("embed", "kv_fused"), dt),
+        "wv": PSpec((d, hkv * hd), ("embed", "kv_fused"), dt),
+        "wo": PSpec((h * hd, d), ("heads", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = PSpec((h * hd,), ("heads",), dt, "zeros")
+        s["bk"] = PSpec((hkv * hd,), ("kv_fused",), dt, "zeros")
+        s["bv"] = PSpec((hkv * hd,), ("kv_fused",), dt, "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = PSpec((hd,), (None,), jnp.float32, "ones")
+        s["k_norm"] = PSpec((hd,), (None,), jnp.float32, "ones")
+    return s
+
+
+def _qkv(cfg, p, x):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_apply(cfg, p, x, rules, positions, window=None, impl="xla"):
+    b, s, d = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    if not cfg.learned_positions:
+        q = rope(q, positions[None], cfg.rope_theta)
+        k = rope(k, positions[None], cfg.rope_theta)
+    q = constrain(q, rules, "batch", "seq", "act_heads", None)
+    k = constrain(k, rules, "batch", "seq", "kv_heads", None)
+    v = constrain(v, rules, "batch", "seq", "kv_heads", None)
+    out = attend(
+        q, k, v, causal=True, window=window, q_positions=positions,
+        impl=impl, chunk=cfg.attn_chunk,
+    )
+    out = constrain(out, rules, "batch", "seq", "act_heads", None)
+    y = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(cfg, p, x, cache, position, rules, window=None):
+    b, _, d = x.shape
+    positions = jnp.full((1,), position, jnp.int32)
+    q, k, v = _qkv(cfg, p, x)
+    if not cfg.learned_positions:
+        q = rope(q, positions[None], cfg.rope_theta)
+        k = rope(k, positions[None], cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), position, axis=1
+    )
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), position, axis=1
+    )
+    kc = constrain(kc, rules, "batch", "cache_seq", "kv_heads", None)
+    vc = constrain(vc, rules, "batch", "cache_seq", "kv_heads", None)
+    out = decode_attention(q, kc, vc, position=position, window=window)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return y, {"k": kc, "v": vc}
+
+
+def attn_cache_spec(cfg, batch, max_len):
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, hkv, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, max_len, hkv, hd), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer: gated MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jdtype
+    return {
+        "w_gate": PSpec((d, f), ("embed", "ffn"), dt),
+        "w_up": PSpec((d, f), ("embed", "ffn"), dt),
+        "w_down": PSpec((f, d), ("ffn", "embed"), dt),
+    }
+
+
+def mlp_apply(cfg, p, x, rules):
+    act = activation(cfg.act)
+    h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, rules, "batch", "seq", "ffn")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# One decoder layer of a given kind
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(cfg, kind: str) -> dict:
+    dt32 = jnp.float32
+    ln_init = "zeros" if cfg.rms_plus_one else "ones"
+    s: dict = {"ln1": PSpec((cfg.d_model,), ("embed",), dt32, ln_init)}
+    if kind == "dense":
+        if cfg.mla:
+            s["attn"] = _mla.mla_specs(cfg)
+        else:
+            s["attn"] = attn_specs(cfg)
+        s["ln2"] = PSpec((cfg.d_model,), ("embed",), dt32, ln_init)
+        s["mlp"] = mlp_specs(cfg)
+    elif kind == "moe":
+        if cfg.mla:
+            s["attn"] = _mla.mla_specs(cfg)
+        else:
+            s["attn"] = attn_specs(cfg)
+        s["ln2"] = PSpec((cfg.d_model,), ("embed",), dt32, ln_init)
+        s["moe"] = _moe.moe_specs(cfg)
+    elif kind == "ssm":
+        s["mix"] = _ssm.ssm_specs(cfg)
+    elif kind == "rec":
+        s["mix"] = _rglru.rglru_specs(cfg)
+        s["ln2"] = PSpec((cfg.d_model,), ("embed",), dt32, ln_init)
+        s["mlp"] = mlp_specs(cfg)
+    elif kind == "attn":          # hybrid local-attention layer
+        s["attn"] = attn_specs(cfg)
+        s["ln2"] = PSpec((cfg.d_model,), ("embed",), dt32, ln_init)
+        s["mlp"] = mlp_specs(cfg)
+    else:
+        raise ValueError(kind)
+    return s
+
+
+def _norm(cfg, w, x):
+    return rms_norm(x, w, cfg.norm_eps, plus_one=cfg.rms_plus_one)
+
+
+def layer_apply(cfg, kind, p, x, rules, positions, impl="xla"):
+    """Full-sequence forward.  Returns (x, cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window
+    if kind in ("dense", "moe"):
+        h = _norm(cfg, p["ln1"], x)
+        if cfg.mla:
+            y, cache = _mla.mla_attention(cfg, p["attn"], h, rules, positions, impl)
+        else:
+            y, cache = attn_apply(cfg, p["attn"], h, rules, positions, window, impl)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            y, aux = _moe.moe_ffn(cfg, p["moe"], h, rules)
+        else:
+            y = mlp_apply(cfg, p["mlp"], h, rules)
+        x = x + y
+    elif kind == "ssm":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = _ssm.ssm_block(cfg, p["mix"], h, rules)
+        x = x + y
+    elif kind == "rec":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = _rglru.rglru_block(cfg, p["mix"], h, rules)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    elif kind == "attn":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = attn_apply(
+            cfg, p["attn"], h, rules, positions, cfg.rglru.attn_window, impl
+        )
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def layer_decode(cfg, kind, p, x, cache, position, rules):
+    window = cfg.sliding_window
+    if kind in ("dense", "moe"):
+        h = _norm(cfg, p["ln1"], x)
+        if cfg.mla:
+            y, cache = _mla.mla_decode(cfg, p["attn"], h, cache, position, rules)
+        else:
+            y, cache = attn_decode(cfg, p["attn"], h, cache, position, rules, window)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            y, _ = _moe.moe_ffn(cfg, p["moe"], h, rules, n_groups=1, drop=False)
+        else:
+            y = mlp_apply(cfg, p["mlp"], h, rules)
+        x = x + y
+    elif kind == "ssm":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = _ssm.ssm_decode(cfg, p["mix"], h, cache, rules)
+        x = x + y
+    elif kind == "rec":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = _rglru.rglru_decode(cfg, p["mix"], h, cache, rules)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    elif kind == "attn":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = attn_decode(
+            cfg, p["attn"], h, cache, position, rules, cfg.rglru.attn_window
+        )
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def layer_cache_spec(cfg, kind, batch, max_len):
+    if kind in ("dense", "moe"):
+        if cfg.mla:
+            return _mla.mla_cache_spec(cfg, batch, max_len)
+        return attn_cache_spec(cfg, batch, max_len)
+    if kind == "ssm":
+        return _ssm.ssm_cache_spec(cfg, batch)
+    if kind == "rec":
+        return _rglru.rglru_cache_spec(cfg, batch)
+    if kind == "attn":
+        # local attention: full-length cache masked by the window (a
+        # window-sized ring buffer is a recorded §Perf optimization)
+        return attn_cache_spec(cfg, batch, max_len)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Segments (pattern × repeats, scanned)
+# ---------------------------------------------------------------------------
+
+
+def segments_for(cfg) -> list[tuple[tuple[str, ...], int]]:
+    if cfg.family in ("dense", "vlm"):
+        return [(("dense",), cfg.n_layers)]
+    if cfg.family == "moe":
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append((("dense",), cfg.first_dense_layers))
+        segs.append((("moe",), cfg.n_layers - cfg.first_dense_layers))
+        return segs
+    if cfg.family == "ssm":
+        return [(("ssm",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = cfg.rglru.block_pattern
+        n_full = cfg.n_layers // len(pat)
+        rem = cfg.n_layers - n_full * len(pat)
+        segs = [(tuple(pat), n_full)]
+        if rem:
+            segs.append((tuple(pat[:rem]), 1))
+        return segs
+    raise ValueError(cfg.family)
+
+
+def _pattern_specs(cfg, pattern):
+    return {f"s{i}_{k}": layer_specs(cfg, k) for i, k in enumerate(pattern)}
+
+
+def _pattern_cache_spec(cfg, pattern, batch, max_len):
+    out = {}
+    for i, k in enumerate(pattern):
+        cs = layer_cache_spec(cfg, k, batch, max_len)
+        cs = {kk: vv for kk, vv in cs.items() if vv is not None}
+        out[f"s{i}_{k}"] = cs
+    return out
+
+
+def _stack_tree(tree, n):
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)     # full remat
+
+
+# ---------------------------------------------------------------------------
+# DecoderLM
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    """Decoder-only LM over heterogeneous scanned segments."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.segments = segments_for(cfg)
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        specs: dict = {
+            "embed": PSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), dt,
+                           scale=1.0),
+            "final_norm": PSpec((cfg.d_model,), ("embed",), jnp.float32,
+                                "zeros" if cfg.rms_plus_one else "ones"),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = PSpec(
+                (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), dt
+            )
+        for si, (pattern, reps) in enumerate(self.segments):
+            specs[f"seg{si}"] = _stack_tree(_pattern_specs(cfg, pattern), reps)
+        return specs
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # -- embedding / head ---------------------------------------------------
+
+    def _embed(self, params, tokens, rules):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return constrain(x, rules, "batch", "seq", "act_embed")
+
+    def _head(self, params, x, rules):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.rms_plus_one)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ w.astype(x.dtype)
+        return constrain(logits, rules, "batch", "seq", "vocab")
+
+    # -- forward (train) ----------------------------------------------------
+
+    def forward(self, params, tokens, rules=None, impl="xla", extra_embeds=None):
+        """tokens (B, S) → logits (B, S, V).  extra_embeds: (B, P, D) prefix
+        (VLM patch embeddings / audio frames are injected by subclasses)."""
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        x = self._embed(params, tokens, rules)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for si, (pattern, reps) in enumerate(self.segments):
+            def body(carry, pslice, _pattern=pattern):
+                h, aux = carry
+                for i, kind in enumerate(_pattern):
+                    h, _, a = layer_apply(
+                        cfg, kind, pslice[f"s{i}_{kind}"], h, rules, positions, impl
+                    )
+                    aux = aux + a
+                return (h, aux), None
+
+            wrapped = _remat(cfg, body)
+            if cfg.scan_layers and reps > 1:
+                (x, aux_total), _ = jax.lax.scan(
+                    wrapped, (x, aux_total), params[f"seg{si}"]
+                )
+            else:
+                for r in range(reps):
+                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    (x, aux_total), _ = wrapped((x, aux_total), pslice)
+        logits = self._head(params, x, rules)
+        return logits, aux_total
+
+    def loss(self, params, batch, rules=None, impl="xla"):
+        """Next-token CE + MoE aux.  batch: {"tokens", "targets", ...}."""
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        logits, aux = self.forward(
+            params, batch["tokens"], rules, impl,
+            extra_embeds=batch.get("extra_embeds"),
+        )
+        targets = batch["targets"]
+        if logits.shape[1] != targets.shape[1]:      # VLM prefix: score text only
+            logits = logits[:, -targets.shape[1]:]
+        if cfg.padded_vocab != cfg.vocab_size:
+            col = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+            logits = jnp.where(col[None, None], -1e30, logits.astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            nll = nll * mask
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            denom = nll.size
+        return jnp.sum(nll) / denom + aux
+
+    # -- prefill / decode ---------------------------------------------------
+
+    def prefill(self, params, tokens, rules=None, impl="xla", extra_embeds=None,
+                max_len=None):
+        """Returns (logits, cache).  cache seq dims sized to the prompt; the
+        serving engine pads to max_len before decode."""
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        x = self._embed(params, tokens, rules)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        caches = []
+        for si, (pattern, reps) in enumerate(self.segments):
+            def body(h, pslice, _pattern=pattern):
+                cs = {}
+                for i, kind in enumerate(_pattern):
+                    h, c, _ = layer_apply(
+                        cfg, kind, pslice[f"s{i}_{kind}"], h, rules, positions, impl
+                    )
+                    cs[f"s{i}_{kind}"] = c
+                return h, cs
+
+            if cfg.scan_layers and reps > 1:
+                x, cache = jax.lax.scan(body, x, params[f"seg{si}"])
+            else:
+                slices = []
+                for r in range(reps):
+                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    x, c = body(x, pslice)
+                    slices.append(c)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+            if cfg.decode_unroll_layers:
+                # match decode_step's per-layer cache layout
+                cache = [
+                    jax.tree.map(lambda a, _r=r: a[_r], cache)
+                    for r in range(reps)
+                ]
+            caches.append(cache)
+        logits = self._head(params, x[:, -1:], rules)
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens, position, rules=None):
+        """tokens (B,1), position scalar int32 → (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        rules = rules or AxisRules(DEFAULT_RULES)
+        x = self._embed(params, tokens, rules)
+        new_caches = []
+        for si, (pattern, reps) in enumerate(self.segments):
+            def body(h, xs, _pattern=pattern):
+                pslice, cs = xs
+                new_cs = {}
+                for i, kind in enumerate(_pattern):
+                    key = f"s{i}_{kind}"
+                    h, c = layer_decode(
+                        cfg, kind, pslice[key], h, cs[key], position, rules
+                    )
+                    new_cs[key] = c
+                return h, new_cs
+
+            if cfg.scan_layers and reps > 1 and cfg.decode_cache_in_carry:
+                # §Perf optimization: the cache rides the scan CARRY (while
+                # loop state is aliased in place by XLA buffer assignment)
+                # instead of xs→ys, which double-buffers the whole cache.
+                def carry_body(carry, xs, _body=body):
+                    h, cfull = carry
+                    pslice, idx = xs
+                    cs = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, idx, 0, keepdims=False), cfull)
+                    h, new_cs = _body(h, (pslice, cs))
+                    cfull = jax.tree.map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u.astype(a.dtype), idx, 0), cfull, new_cs)
+                    return (h, cfull), None
+
+                (x, new_cache), _ = jax.lax.scan(
+                    carry_body, (x, cache[si]),
+                    (params[f"seg{si}"], jnp.arange(reps)),
+                )
+            elif cfg.scan_layers and reps > 1 and not cfg.decode_unroll_layers:
+                x, new_cache = jax.lax.scan(body, x, (params[f"seg{si}"], cache[si]))
+            elif cfg.decode_unroll_layers:
+                # §Perf: unrolled decode — each layer's cache is a separate
+                # donated buffer; the slot update aliases in place (no loop
+                # carry copies, no full-cache stacking)
+                new_cache = []
+                for r in range(reps):
+                    pslice = jax.tree.map(lambda a, _r=r: a[_r], params[f"seg{si}"])
+                    x, c = body(x, (pslice, cache[si][r]))
+                    new_cache.append(c)
+            else:
+                slices = []
+                for r in range(reps):
+                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    cslice = jax.tree.map(lambda a: a[r], cache[si])
+                    x, c = body(x, (pslice, cslice))
+                    slices.append(c)
+                new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+            new_caches.append(new_cache)
+        logits = self._head(params, x, rules)
+        return logits, new_caches
+
+    # -- cache / inputs -----------------------------------------------------
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        out = []
+        for pattern, reps in self.segments:
+            tree = _pattern_cache_spec(cfg, pattern, batch, max_len)
+            if cfg.decode_unroll_layers:
+                out.append([tree for _ in range(reps)])   # per-layer leaves
+            else:
+                out.append(
+                    jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype),
+                        tree,
+                    )
+                )
+        return out
+
+
+def cache_window(cfg) -> int:
+    return cfg.rglru.attn_window if cfg.rglru else (cfg.sliding_window or 0)

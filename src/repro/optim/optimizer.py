@@ -1,0 +1,133 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+``sgd`` / ``momentum`` are the paper's STREAM_GD form (Eq. 1):
+``W = C0·W + C1·dW`` — on TPU these lower to fused elementwise updates, and
+the ConvNet example can route them through the actual ``kernels/stream_gd``
+Pallas kernel.  ``adamw`` supports compressed (bf16) first/second moments —
+the distributed-optimization trick that lets the 671B MoE's optimizer state
+fit the per-device HBM budget (recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]   # (grads, state, params)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float = 1e-2, weight_decay: float = 0.0) -> Optimizer:
+    """Paper Eq. (1) with C0 = (1 - lr·λ), C1 = -lr."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c0 = 1.0 - lr * weight_decay
+        c1 = -lr
+        new = _tmap(lambda w, g: (c0 * w.astype(jnp.float32)
+                                  + c1 * g.astype(jnp.float32)).astype(w.dtype),
+                    params, grads)
+        return new, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float = 1e-2, beta: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        m = _tmap(lambda m_, g: beta * m_ + g.astype(jnp.float32), state["m"], grads)
+        new = _tmap(
+            lambda w, m_: ((1.0 - lr * weight_decay) * w.astype(jnp.float32)
+                           - lr * m_).astype(w.dtype),
+            params, m,
+        )
+        return new, {"m": m, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+    grad_clip: float | None = 1.0,
+) -> Optimizer:
+    """AdamW with optional compressed moment state (bf16)."""
+
+    def init(params):
+        return {
+            "m": _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params),
+            "v": _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            ))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = _tmap(lambda g: g * scale.astype(g.dtype), grads)
+        cnt = state["count"] + 1
+        bc1 = 1.0 - b1 ** cnt.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** cnt.astype(jnp.float32)
+
+        def upd(w, g, m_, v_):
+            g = g.astype(jnp.float32)
+            m32 = b1 * m_.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v_.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w.astype(jnp.float32)
+            neww = (w.astype(jnp.float32) - lr * step).astype(w.dtype)
+            return neww, m32.astype(state_dtype), v32.astype(state_dtype)
+
+        out = _tmap(upd, params, grads, state["m"], state["v"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([l[0] for l in leaves])
+        new_m = treedef.unflatten([l[1] for l in leaves])
+        new_v = treedef.unflatten([l[2] for l in leaves])
+        return new_p, {"m": new_m, "v": new_v, "count": cnt}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)
+
+
+def state_axes_like(param_axes_tree, state):
+    """Axes tree for optimizer state mirroring the param axes (moments are
+    sharded exactly like their parameters)."""
+    def like(sub):
+        return jax.tree.map(lambda _ , ax=None: ax, sub)
+
+    out = {}
+    for k, v in state.items():
+        if k == "count":
+            out[k] = ()
+        else:
+            out[k] = param_axes_tree
+    return out

@@ -1,0 +1,149 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+The engine mirrors the paper's SMC-network serving pattern: requests stream
+in (the "camera"), slots process independently (each slot ≙ one cube's
+image), and the host only coordinates.  Implementation: a fixed-size slot
+array over the decode batch; finished slots are refilled from the queue
+(continuous batching); prefill runs per-request and its cache is packed into
+the slot's row of the decode cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+    eos_id: int | None = None
+
+
+class ServeEngine:
+    """Greedy/temperature sampling over the DecoderLM serving API."""
+
+    def __init__(self, model, params, ecfg: EngineConfig, rules=None):
+        import dataclasses
+
+        from repro.models.api import build_model
+
+        # the engine packs per-slot caches into stacked buffers; use the
+        # stacked decode layout (the unrolled layout is the production
+        # serving path proven by the dry-run)
+        if model.cfg.decode_unroll_layers:
+            model = build_model(
+                dataclasses.replace(model.cfg, decode_unroll_layers=False)
+            )
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.rules = rules
+        self.cfg = model.cfg
+        b, m = ecfg.batch_slots, ecfg.max_len
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), model.cache_specs(b, m)
+        )
+        self.slot_req: list[Request | None] = [None] * b
+        self.slot_pos = np.zeros(b, np.int32)      # next write position
+        self.queue: list[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- jitted pieces --------------------------------------------------------
+
+    def _decode_impl(self, params, cache, tokens, position):
+        return self.model.decode_step(params, cache, tokens, position, self.rules)
+
+    # -- request handling ------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slot(self, slot: int, req: Request):
+        """Prefill one request and pack its cache into the slot row."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache = self.model.prefill(
+            self.params, prompt, self.rules, max_len=self.ecfg.max_len
+        )
+        s = prompt.shape[1]
+
+        def pack(big, small):
+            # big: (reps, B, ...); small: (reps, 1, ...) with seq dims = s
+            if big.ndim >= 3 and small.shape[2:3] != big.shape[2:3] and small.ndim == big.ndim:
+                pad = [(0, 0)] * small.ndim
+                pad[2] = (0, big.shape[2] - small.shape[2])
+                small = jnp.pad(small, pad)
+            return big.at[:, slot: slot + 1].set(small.astype(big.dtype))
+
+        self.cache = jax.tree.map(pack, self.cache, cache)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = s
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+
+    def _refill(self):
+        for i in range(self.ecfg.batch_slots):
+            if self.slot_req[i] is None and self.queue:
+                self._fill_slot(i, self.queue.pop(0))
+
+    def step(self, key=None):
+        """One decode step for every active slot (single shared position —
+        slots are stepped at their own positions via per-slot masking)."""
+        self._refill()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        b = self.ecfg.batch_slots
+        last = np.zeros((b, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slot_req[i].out_tokens[-1]
+        # engine invariant: slots advance together; positions tracked per slot
+        pos = int(max(self.slot_pos[i] for i in active))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(last), jnp.asarray(pos, jnp.int32)
+        )
+        logits = np.asarray(logits[:, 0], np.float32)
+        for i in active:
+            req = self.slot_req[i]
+            if req.temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = int(jax.random.categorical(sub, jnp.asarray(logits[i]) / req.temperature))
+            else:
+                tok = int(np.argmax(logits[i]))
+            req.out_tokens.append(tok)
+            self.slot_pos[i] = pos + 1
+            if (
+                len(req.out_tokens) >= req.max_new_tokens
+                or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
+                or self.slot_pos[i] >= self.ecfg.max_len - 1
+            ):
+                req.done = True
+                self.slot_req[i] = None
+        return True
+
+    def run(self, key=None) -> list[Request]:
+        done: list[Request] = []
+        seen: set[int] = set()
+        all_reqs = list(self.queue)
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step(key)
+            for r in all_reqs:
+                if r.done and r.uid not in seen:
+                    seen.add(r.uid)
+                    done.append(r)
+        return done

@@ -1,0 +1,166 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == BF16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# tiled_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 16, 8), (64, 96, 80), (128, 128, 128), (200, 300, 100), (1, 7, 5),
+    (256, 512, 128),
+])
+@pytest.mark.parametrize("dt", [F32, BF16])
+def test_tiled_matmul(rng, m, k, n, dt):
+    x = jnp.asarray(rng.normal(size=(m, k)), dt)
+    y = jnp.asarray(rng.normal(size=(k, n)), dt)
+    got = ops.tiled_matmul(x, y)
+    want = ref.tiled_matmul(x, y)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+# ---------------------------------------------------------------------------
+# stream_mac_conv  (the paper's core op)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,hw,ci,co,k,s,p", [
+    (1, 16, 8, 16, 3, 1, 1),
+    (2, 12, 3, 8, 5, 2, 2),
+    (1, 9, 4, 4, 1, 1, 0),
+    (1, 11, 3, 96, 11, 4, 0),       # AlexNet conv1 shape family
+    (1, 8, 130, 8, 3, 1, 1),        # ci > lane width: multi-pass T_Ci
+    (2, 7, 5, 6, 7, 1, 3),
+])
+@pytest.mark.parametrize("dt", [F32, BF16])
+def test_stream_mac_conv(rng, n, hw, ci, co, k, s, p, dt):
+    x = jnp.asarray(rng.normal(size=(n, hw, hw, ci)), dt)
+    w = jnp.asarray(rng.normal(size=(k, k, ci, co)) / np.sqrt(k * k * ci), dt)
+    got = ops.stream_mac_conv(x, w, stride=(s, s), padding=(p, p))
+    want = ref.stream_mac_conv(x, w, stride=(s, s), padding=(p, p))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+def test_stream_mac_conv_asymmetric_stride(rng):
+    x = jnp.asarray(rng.normal(size=(1, 12, 10, 4)), F32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), F32)
+    got = ops.stream_mac_conv(x, w, stride=(2, 1), padding=(1, 1))
+    want = ref.stream_mac_conv(x, w, stride=(2, 1), padding=(1, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# stream_maxpool
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hw,c,k,s", [(8, 5, 2, 2), (13, 16, 3, 2), (7, 130, 3, 1)])
+def test_stream_maxpool(rng, hw, c, k, s):
+    x = jnp.asarray(rng.normal(size=(2, hw, hw, c)), F32)
+    got = ops.stream_maxpool(x, (k, k), (s, s))
+    want = ref.stream_maxpool(x, (k, k), (s, s))
+    np.testing.assert_allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# stream_gd  (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("j,shape", [(2, (7, 11)), (3, (64,)), (4, (5, 3, 2))])
+def test_stream_gd(rng, j, shape):
+    d = jnp.asarray(rng.normal(size=(j, *shape)), F32)
+    c = jnp.asarray(rng.normal(size=(j,)), F32)
+    got = ops.stream_gd(d, c)
+    want = ref.stream_gd(d, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stream_gd_is_sgd_update(rng):
+    """W' = C0·W + C1·dW with C0=1-lr·wd, C1=-lr reproduces SGD (paper §V-B)."""
+    w = jnp.asarray(rng.normal(size=(32,)), F32)
+    g = jnp.asarray(rng.normal(size=(32,)), F32)
+    lr, wd = 0.1, 0.01
+    got = ops.stream_gd(jnp.stack([w, g]), jnp.asarray([1 - lr * wd, -lr]))
+    want = (1 - lr * wd) * w - lr * g
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,sk,d,causal,win,off", [
+    (1, 4, 2, 64, 64, 32, True, None, 0),
+    (2, 2, 1, 32, 128, 16, True, None, 96),     # decode-ish with offset
+    (1, 2, 2, 128, 128, 64, True, 64, 0),       # sliding window
+    (1, 4, 4, 64, 64, 32, False, None, 0),      # bidirectional (whisper enc)
+    (1, 8, 2, 100, 70, 24, True, None, 0),      # ragged, padded dims
+])
+@pytest.mark.parametrize("dt", [F32, BF16])
+def test_flash_attention(rng, b, h, hkv, sq, sk, d, causal, win, off, dt):
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), dt)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dt)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dt)
+    got = ops.flash_attention(q, k, v, causal=causal, window=win, q_offset=off)
+    want = ref.flash_attention(q, k, v, causal=causal, window=win, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+def test_flash_attention_blocks_sweep(rng):
+    """Block-size invariance: different (bq, bk) tilings agree exactly-ish."""
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), F32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), F32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), F32)
+    outs = [
+        np.asarray(ops.flash_attention(q, k, v, block_q=bq, block_k=bk))
+        for bq, bk in [(128, 128), (64, 128), (128, 64), (32, 32)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan  (VMEM-resident Mamba-2 chunk kernel — §Perf cell 3's TPU answer)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 32, 2, 8, 8, 8),
+    (2, 64, 4, 8, 16, 16),
+    (2, 64, 4, 8, 16, 64),       # single chunk
+    (1, 128, 3, 16, 8, 32),
+])
+@pytest.mark.parametrize("dt_", [F32, BF16])
+def test_ssd_scan(rng, b, s, h, p, n, chunk, dt_):
+    xh = jnp.asarray(rng.normal(size=(b, s, h, p)), dt_) * 0.5
+    bb = jnp.asarray(rng.normal(size=(b, s, n)), dt_) * 0.5
+    cc = jnp.asarray(rng.normal(size=(b, s, n)), dt_) * 0.5
+    dts = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, s, h)), F32)
+    a = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), F32)
+    got = ops.ssd_scan(xh, bb, cc, dts, a, chunk=chunk)
+    want = ref.ssd_scan(xh, bb, cc, dts, a)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **(_tol(dt_) if dt_ == BF16 else dict(rtol=5e-4, atol=5e-4)),
+    )

@@ -1,0 +1,183 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.smc import SMCModel
+from repro.core.tiling import (
+    ConvLayerSpec,
+    Tile4D,
+    choose_matmul_blocks,
+    oi_for_tiles,
+    tile_candidates,
+    tile_spm_bytes,
+)
+from repro.kernels import ops, ref
+from repro.models.moe import _dispatch_masks
+
+SET = settings(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Tiling invariants (the paper's §IV-A mechanics)
+# ---------------------------------------------------------------------------
+
+
+layers = st.builds(
+    ConvLayerSpec,
+    name=st.just("l"),
+    xi=st.integers(8, 64),
+    yi=st.integers(8, 64),
+    ci=st.sampled_from([3, 16, 32, 64]),
+    co=st.sampled_from([16, 32, 64]),
+    kx=st.sampled_from([1, 3, 5]),
+    ky=st.sampled_from([1, 3, 5]),
+    sx=st.sampled_from([1, 2]),
+    sy=st.sampled_from([1, 2]),
+    px=st.integers(0, 2),
+    py=st.integers(0, 2),
+)
+
+
+@SET
+@given(layers)
+def test_candidates_respect_spm(l):
+    spm = 128 * 1024
+    for t in tile_candidates(l, spm, max_candidates=64):
+        assert tile_spm_bytes(l, t) <= spm
+
+
+@SET
+@given(layers)
+def test_tiles_cover_output_exactly(l):
+    """Every output element belongs to >= 1 tile; tile grid covers [Xo]x[Yo]x[Co]."""
+    if l.xo <= 0 or l.yo <= 0:
+        return
+    for t in list(tile_candidates(l, 128 * 1024, max_candidates=8)):
+        import math
+
+        n_x = math.ceil(l.xo / t.txo(l))
+        n_y = math.ceil(l.yo / t.tyo(l))
+        n_c = math.ceil(l.co / t.tco)
+        assert n_x * t.txo(l) >= l.xo
+        assert n_y * t.tyo(l) >= l.yo
+        assert n_c * t.tco >= l.co
+
+
+@SET
+@given(layers, st.integers(0, 3))
+def test_oi_monotone_in_tco(l, bump):
+    """OI is non-decreasing in T_Co (paper: OI ∝ R_TCL = T_Co/T_Ci)."""
+    if l.xo <= 0 or l.yo <= 0 or l.kind == "pool":
+        return
+    base = Tile4D(min(l.xi, l.kx + 3), min(l.yi, l.ky + 3), min(l.ci, 16), 8)
+    if base.tco * (2 ** bump) > l.co:
+        return
+    bigger = Tile4D(base.txi, base.tyi, base.tci, base.tco * (2 ** bump))
+    assert oi_for_tiles(l, bigger) >= oi_for_tiles(l, base) * 0.999
+
+
+@SET
+@given(st.integers(8, 2048), st.integers(8, 2048), st.integers(8, 4096))
+def test_matmul_blocks_fit_vmem(m, n, k):
+    from repro.core.tiling import VMemBudget
+
+    bud = VMemBudget()
+    bm, bn, bk = choose_matmul_blocks(m, n, k, 4, bud)
+    work = 2 * (bm * bk + bk * bn) * 4 + bm * bn * 4
+    assert work <= bud.bytes_limit
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
+
+
+@SET
+@given(layers)
+def test_simulator_roofline_bound(l):
+    """Modeled GFLOPS never exceeds the machine roofline (validity of the
+    cycle model vs the analytic bound)."""
+    if l.xo <= 0 or l.yo <= 0 or l.macs == 0:
+        return
+    m = SMCModel()
+    try:
+        tile, perf = m.optimize_layer(l)
+    except ValueError:
+        return
+    gflops = l.flops / (perf.total_cycles / m.cfg.clock_hz) / 1e9
+    roof = m.roofline_gflops(perf.oi)
+    assert gflops <= roof * 1.02
+
+
+# ---------------------------------------------------------------------------
+# Kernel properties
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(st.integers(1, 4), st.integers(4, 32), st.integers(1, 8), st.integers(1, 16))
+def test_conv_linearity(b, hw, ci, co):
+    """conv(ax) = a·conv(x) — streaming MACs are linear."""
+    rng = np.random.default_rng(b * 1000 + hw)
+    x = jnp.asarray(rng.normal(size=(b, hw, hw, ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, ci, co)), jnp.float32)
+    y1 = np.asarray(ops.stream_mac_conv(2.0 * x, w, padding=(1, 1)))
+    y2 = 2.0 * np.asarray(ops.stream_mac_conv(x, w, padding=(1, 1)))
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(st.integers(2, 64), st.floats(0.5, 10.0))
+def test_attention_scale_invariance_to_shift(s, shift):
+    """softmax shift invariance: adding a constant to all logits via a
+    constant key direction leaves attention output unchanged."""
+    rng = np.random.default_rng(s)
+    q = jnp.asarray(rng.normal(size=(1, 1, s, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, s, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, s, 16)), jnp.float32)
+    o1 = ref.flash_attention(q, k, v, causal=True)
+    o2 = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+@SET
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(8, 64))
+def test_stream_gd_linearity(j, extra, m):
+    rng = np.random.default_rng(j * 100 + m)
+    d = jnp.asarray(rng.normal(size=(j, m)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(j,)), jnp.float32)
+    got = np.asarray(ops.stream_gd(d, 2.0 * c))
+    want = 2.0 * np.asarray(ops.stream_gd(d, c))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE router invariants
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(st.integers(1, 3), st.integers(8, 64), st.sampled_from([4, 8]),
+       st.sampled_from([1, 2]))
+def test_moe_dispatch_conservation(g, t, e, k):
+    """With ample capacity: every token dispatched to exactly k experts and
+    combine weights sum to 1 per token."""
+    rng = np.random.default_rng(g * t)
+    gates = jax.nn.softmax(jnp.asarray(rng.normal(size=(g, t, e)), jnp.float32))
+    cap = t * k          # ample
+    disp, comb = _dispatch_masks(gates, k, cap)
+    per_token = np.asarray(jnp.sum(disp, axis=(2, 3)))
+    np.testing.assert_allclose(per_token, k)
+    wsum = np.asarray(jnp.sum(comb, axis=(2, 3)))
+    np.testing.assert_allclose(wsum, 1.0, rtol=1e-5)
+
+
+@SET
+@given(st.integers(8, 32), st.sampled_from([4, 8]))
+def test_moe_capacity_never_exceeded(t, e):
+    rng = np.random.default_rng(t * e)
+    gates = jax.nn.softmax(jnp.asarray(rng.normal(size=(1, t, e)), jnp.float32))
+    cap = 2
+    disp, _ = _dispatch_masks(gates, 2, cap)
+    per_expert_slot = np.asarray(jnp.sum(disp, axis=1))     # (1, E, C)
+    assert per_expert_slot.max() <= 1.0 + 1e-6              # one token per slot
+    per_expert = per_expert_slot.sum(-1)
+    assert per_expert.max() <= cap + 1e-6

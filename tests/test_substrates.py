@@ -1,0 +1,276 @@
+"""Substrate tests: optimizer, checkpoint roundtrip + atomicity, fault
+tolerance (crash→restore→resume), data pipeline determinism, serving engine,
+ConvNet executor (xla vs tiled vs pallas), gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticImageData, SyntheticLMData
+from repro.dist.collectives import compress_tree, decompress_tree
+from repro.dist.fault import FaultInjector, StragglerDetector
+from repro.models import build_model
+from repro.models.common import AxisRules, DEFAULT_RULES
+from repro.optim.optimizer import adamw, momentum, sgd
+from repro.train import checkpoint as ck
+from repro.train.trainer import Trainer, TrainerConfig
+
+RULES = AxisRules(DEFAULT_RULES)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quad_problem():
+    params = {"w": jnp.asarray([2.0, -3.0, 1.0])}
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.asarray([1.0, 1.0, 1.0])))
+
+    return params, loss
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(lr=0.1),
+    lambda: momentum(lr=0.05),
+    lambda: adamw(lr=0.2, weight_decay=0.0),
+    lambda: adamw(lr=0.2, weight_decay=0.0, state_dtype=jnp.bfloat16),
+])
+def test_optimizers_converge(make):
+    params, loss = _quad_problem()
+    opt = make()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < l0 * 0.05
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    opt = adamw(lr=0.1, grad_clip=1.0)
+    state = opt.init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    new, state = opt.update(g, state, params)
+    assert np.all(np.isfinite(np.asarray(new["w"])))
+    assert np.abs(np.asarray(new["w"])).max() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "nested": {"b": np.ones((4,), np.float32)},
+        "stack": [np.zeros((2, 2), np.float32), np.full((1,), 7, np.float32)],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t, opt_state={"m": t}, extra={"cursor": {"s": 3}})
+    params, opt, extra, step = ck.restore(str(tmp_path), t, {"m": t})
+    assert step == 5
+    assert extra["cursor"]["s"] == 3
+    np.testing.assert_array_equal(params["a"], t["a"])
+    np.testing.assert_array_equal(opt["m"]["nested"]["b"], t["nested"]["b"])
+    np.testing.assert_array_equal(params["stack"][1], t["stack"][1])
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    # simulate crash mid-save: step_2 exists without META
+    bad = tmp_path / "step_00000002"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"garbage")
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_gc(tmp_path):
+    t = _tree()
+    for s in range(1, 6):
+        ck.save(str(tmp_path), s, t, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    kept = sorted(p for p in os.listdir(tmp_path) if p.startswith("step_"))
+    assert len(kept) == 2
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore onto a different mesh: logical arrays identical."""
+    t = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
+    ck.save(str(tmp_path), 1, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))}
+    params, extra, step = ck.restore(str(tmp_path), t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(params["w"]), t["w"])
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: crash -> restore -> resume, exact-once data
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_crash_restore_resume(tmp_path):
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    data = SyntheticLMData(cfg, batch=2, seq=16)
+    tcfg = TrainerConfig(
+        total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=4,
+        optimizer="sgd", lr=1e-3, log_every=100,
+    )
+    fault = FaultInjector(fail_at={6})
+    tr = Trainer(model, data, tcfg, RULES, fault_injector=fault)
+    state, restarts = tr.run_with_restarts(jax.random.key(0))
+    assert restarts == 1
+    assert state.step == 12
+    # data cursor resumed from the checkpoint: step 12 consumed batches 0..11
+    # with a re-read of 5,6,7 after restoring step-4's cursor... cursor ends
+    # consistent with the step count.
+    assert data.state.step >= 12
+
+    # a fresh no-fault run reaches the same step count
+    data2 = SyntheticLMData(cfg, batch=2, seq=16)
+    tcfg2 = TrainerConfig(
+        total_steps=12, ckpt_dir=str(tmp_path / "clean"), ckpt_every=4,
+        optimizer="sgd", lr=1e-3, log_every=100,
+    )
+    tr2 = Trainer(model, data2, tcfg2, RULES)
+    state2, restarts2 = tr2.run_with_restarts(jax.random.key(0))
+    assert restarts2 == 0 and state2.step == 12
+    # determinism: same final loss with and without the crash (exact resume)
+    assert state.losses[-1] == pytest.approx(state2.losses[-1], rel=1e-4)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(n_hosts=3, factor=1.5, timeout=1e9)
+    # injected clock: hosts 0,1 step at 1.0s, host 2 at 3.0s per step
+    t = {0: 0.0, 1: 0.0, 2: 0.0}
+    for step in range(3):
+        for h in range(3):
+            det.report(h, step, now=t[h])
+            t[h] += 1.0 if h < 2 else 3.0
+    assert det.stragglers() == [2]
+    assert det.dead() == []
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_cursor():
+    cfg = get_arch("qwen2.5-3b").reduced()
+    d1 = SyntheticLMData(cfg, batch=2, seq=8, seed=7)
+    b0, b1 = d1.next(), d1.next()
+    d2 = SyntheticLMData(cfg, batch=2, seq=8, seed=7)
+    d2.load_state_dict({"seed": 7, "step": 1})
+    np.testing.assert_array_equal(b1["tokens"], d2.next()["tokens"])
+    # targets are tokens shifted by one
+    d3 = SyntheticLMData(cfg, batch=1, seq=8, seed=1)
+    b = d3.next()
+    assert b["tokens"].shape == b["targets"].shape
+    assert not np.array_equal(b["tokens"], b["targets"])
+
+
+def test_image_data_labels_learnable():
+    """Class templates are recoverable: per-class mean correlates with the
+    class template far more than with other templates."""
+    d = SyntheticImageData(px=8, channels=3, classes=4, batch=256)
+    x, y = d.next()
+    for k in range(4):
+        mk = x[y == k].mean(0)
+        own = float(np.sum(mk * d.templates[k]))
+        other = max(float(np.sum(mk * d.templates[j])) for j in range(4) if j != k)
+        assert own > other, k
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_continuous_batching():
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, EngineConfig(batch_slots=2, max_len=64), RULES)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=(5 + i,)),
+                max_new_tokens=4)
+        for i in range(5)    # more requests than slots -> queueing
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) >= 4 for r in done)
+
+
+def test_serve_greedy_matches_forward():
+    """Engine's greedy continuation equals argmax over the full forward."""
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = np.asarray([5, 9, 2, 7], np.int32)
+    eng = ServeEngine(model, params, EngineConfig(batch_slots=1, max_len=32), RULES)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    done = eng.run()
+    logits, _ = model.forward(params, jnp.asarray(prompt)[None], RULES)
+    want = int(jnp.argmax(logits[0, -1]))
+    assert done[0].out_tokens[0] == want
+
+
+# ---------------------------------------------------------------------------
+# ConvNet executor impl agreement
+# ---------------------------------------------------------------------------
+
+
+def test_convnet_impls_agree():
+    from repro.core.convnet import ConvNetExecutor, make_small_convnet
+    from repro.core.tiling import Tile4D
+
+    layers = make_small_convnet(num_classes=4, width=8, input_px=16)
+    exe_xla = ConvNetExecutor(layers, impl="xla")
+    params = exe_xla.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    y_xla = exe_xla.apply(params, x)
+
+    tiles = {l.name: Tile4D(10, 10, max(l.ci // 2, 1), l.co)
+             for l in layers if l.kind == "conv"}
+    y_tiled = ConvNetExecutor(layers, impl="tiled", tiles=tiles).apply(params, x)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_tiled),
+                               rtol=1e-4, atol=1e-4)
+
+    y_pallas = ConvNetExecutor(layers, impl="pallas").apply(params, x)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pallas),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,tol", [("bf16", 1e-2), ("int8", 2e-2)])
+def test_gradient_compression_roundtrip(mode, tol):
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+    c, scales = compress_tree(g, mode)
+    back = decompress_tree(c, scales, mode)
+    err = np.abs(np.asarray(back["w"]) - np.asarray(g["w"])).max()
+    assert err < tol * np.abs(np.asarray(g["w"])).max() + tol
