@@ -8,6 +8,7 @@ paper's scale-out scheme.  Also prints the analytic SMC-network projection
 
 Run:  PYTHONPATH=src python examples/multi_smc_inference.py
 """
+import functools
 import time
 
 import jax
@@ -16,7 +17,8 @@ import numpy as np
 
 from repro.core import zoo
 from repro.core.convnet import ConvNetExecutor, make_small_convnet
-from repro.core.smc import SMCModel, simulate_smc_network
+from repro.core.smc import SMCModel, cube_rules, make_cube_mesh, simulate_smc_network
+from repro.dist.sharding import batch_shardings, replicated
 
 
 def main():
@@ -28,11 +30,22 @@ def main():
     n_cubes = 4                                  # logical SMCs
     frames = jax.random.normal(jax.random.key(1), (n_cubes, 8, 16, 16, 3))
 
-    @jax.jit
+    # the cube dimension rides the same sharding rules as the LM stack's
+    # batch axis: CUBE_AXIS ≙ the production mesh's "pod" axis.  On multiple
+    # devices each cube's image batch lands on its own shard; on the 1-device
+    # CPU host every rule falls back to replication.
+    mesh = make_cube_mesh(n_cubes)
+    rules = cube_rules(mesh)
+    frame_sh = batch_shardings(mesh, {"frames": frames}, rules)["frames"]
+    param_sh = jax.tree.map(lambda _: replicated(mesh), params)
+    frames = jax.device_put(frames, frame_sh)
+    params = jax.device_put(params, param_sh)
+
+    @functools.partial(jax.jit, in_shardings=(param_sh, frame_sh))
     def network_step(params, frames):
-        # each cube processes its own image batch independently — vmap is
-        # the single-host stand-in for the per-pod data parallelism the
-        # multi-pod dry-run proves at (pod=2, data=16, model=16)
+        # each cube processes its own image batch independently — vmap over
+        # the cube axis is the per-pod data parallelism the multi-pod
+        # dry-run proves at (pod=2, data=16, model=16)
         return jax.vmap(lambda f: exe.apply(params, f))(frames)
 
     out = network_step(params, frames)

@@ -244,6 +244,45 @@ class SMCNetworkReport:
     speedup_vs_k40_eff: float
 
 
+# The mesh axis that carries cube-parallel (SMC-network) traffic.  It is the
+# same axis the production mesh calls "pod": each slot along it ≙ one SMC
+# working on independent inputs with coefficients replicated per cube, so the
+# LM stack's logical→mesh rule table ("batch" → (pod, data)) routes batch
+# parallelism over cubes with no special-casing.
+CUBE_AXIS = "pod"
+
+
+def make_cube_mesh(n_cubes: int | None = None):
+    """Device mesh whose leading axis is the SMC-network axis (§VI-C).
+
+    Uses the largest cube count ≤ ``n_cubes`` that divides the available
+    device count (1 on the CPU test host — the mesh then degrades to a single
+    cube and every sharding falls back to replication via ``dist.sharding``).
+    """
+    import jax
+
+    n_dev = len(jax.devices())
+    n = min(n_cubes or n_dev, n_dev)
+    while n_dev % n:
+        n -= 1
+    return jax.make_mesh((n, n_dev // n), (CUBE_AXIS, "data"))
+
+
+def cube_rules(mesh):
+    """The standard logical→mesh table resolved for a cube mesh: batch over
+    (cube, data), everything else replicated (coefficients live per cube)."""
+    from repro.models.common import AxisRules, DEFAULT_RULES
+
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = tuple(
+        a for a in (CUBE_AXIS, "data") if a in mesh.axis_names
+    ) or None
+    for name in ("heads", "ffn", "experts", "vocab", "cache_seq", "lru",
+                 "ssm_heads"):
+        rules[name] = None
+    return AxisRules(rules)
+
+
 def simulate_smc_network(
     model: SMCModel,
     layers: Sequence[ConvLayerSpec],

@@ -1,0 +1,26 @@
+"""Distribution layer: logical-axis sharding rules, gradient-compression
+collectives, and fault tolerance.
+
+Three modules, one contract:
+
+* ``sharding`` — resolve the per-arch logical→mesh axis table against any
+  device mesh (production 256/512-chip meshes, host meshes, or the 1-device
+  CPU mesh used by tests) with per-leaf divisibility fallbacks, and turn
+  PSpec / ShapeDtypeStruct pytrees into ``NamedSharding`` pytrees.
+* ``collectives`` — lossy gradient compression for the inter-cube links
+  (paper §VI-C scale-out; Schuiki et al.'s gradient-compression direction)
+  plus the XLA async-collective overlap flag set.
+* ``fault`` — crash injection and straggler/dead-host detection for the
+  Trainer's crash→restore→resume loop.
+"""
+from .collectives import compress_tree, decompress_tree, overlap_flags  # noqa: F401
+from .fault import FaultInjector, StragglerDetector  # noqa: F401
+from .sharding import (  # noqa: F401
+    arch_rules,
+    batch_shardings,
+    cache_axes,
+    param_shardings,
+    replicated,
+    resolve_spec,
+    tree_shardings,
+)

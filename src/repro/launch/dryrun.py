@@ -1,13 +1,18 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST precede every other import: jax locks the device
-# count on first initialization.  (REPRO_DRYRUN_DEVICES overrides for the
-# scaled-down debug path used by tests.)
+# These lines MUST precede every other import: jax locks the device count on
+# first initialization.  A caller that already forced a device count (the
+# multi-pod subprocess tests, REPRO_DRYRUN_DEVICES) wins; the CLI default is
+# the 512-chip production footprint.
+_flags = os.environ.get("XLA_FLAGS", "")
 if os.environ.get("REPRO_DRYRUN_DEVICES"):
     os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count="
+        _flags + " --xla_force_host_platform_device_count="
         + os.environ["REPRO_DRYRUN_DEVICES"]
-    )
+    ).strip()
+elif "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run (deliverable e).
 
@@ -44,7 +49,7 @@ from repro.dist.sharding import (
     replicated,
     tree_shardings,
 )
-from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.mesh import describe, make_production_mesh, set_mesh
 from repro.models.api import build_model, input_specs
 from repro.models.common import abstract_params
 from repro.optim.optimizer import adamw
@@ -61,6 +66,27 @@ def model_flops_estimate(cfg, shape: ShapeSuite) -> float:
         tokens = shape.global_batch * shape.seq_len
         return 2.0 * n * tokens
     return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def _memory_fields(compiled) -> dict:
+    """``memory_analysis`` fields with a zero fallback: the CPU backend (used
+    by the scaled-down subprocess dry-run) may not implement it."""
+    try:
+        ma = compiled.memory_analysis()
+        fields = {
+            "argument": ma.argument_size_in_bytes,
+            "output": ma.output_size_in_bytes,
+            "temp": ma.temp_size_in_bytes,
+            "alias": ma.alias_size_in_bytes,
+            "available": True,
+        }
+    except Exception:
+        fields = {"argument": 0, "output": 0, "temp": 0, "alias": 0,
+                  "available": False}
+    fields["per_device"] = (
+        fields["argument"] + fields["output"] + fields["temp"] - fields["alias"]
+    )
+    return fields
 
 
 def lower_cell(
@@ -94,7 +120,7 @@ def lower_cell(
     label = f"{arch}/{shape_name}/{describe(mesh)}{label_suffix}"
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if step_kind == "train":
             opt = adamw(state_dtype=jnp.dtype(cfg.opt_state_dtype))
             ostate = jax.eval_shape(opt.init, aparams)
@@ -151,7 +177,7 @@ def lower_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    mem = compiled.memory_analysis()
+    mem = _memory_fields(compiled)
     rep = analyze_compiled(
         compiled, label, n_dev, model_flops=model_flops_estimate(cfg, shape)
     )
@@ -165,18 +191,17 @@ def lower_cell(
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
         "memory": {
-            "argument_GB": mem.argument_size_in_bytes / 1e9,
-            "output_GB": mem.output_size_in_bytes / 1e9,
-            "temp_GB": mem.temp_size_in_bytes / 1e9,
-            "alias_GB": mem.alias_size_in_bytes / 1e9,
-            "per_device_GB": (
-                mem.argument_size_in_bytes + mem.output_size_in_bytes
-                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
-            ) / 1e9,
+            "argument_GB": mem["argument"] / 1e9,
+            "output_GB": mem["output"] / 1e9,
+            "temp_GB": mem["temp"] / 1e9,
+            "alias_GB": mem["alias"] / 1e9,
+            "per_device_GB": mem["per_device"] / 1e9,
+            # None (not True) when the backend can't do memory analysis —
+            # a fit verdict with no data would be worse than no verdict
             "fits_v5e_16GB": (
-                mem.argument_size_in_bytes + mem.output_size_in_bytes
-                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
-            ) < V5E.hbm_bytes,
+                mem["per_device"] < V5E.hbm_bytes if mem["available"] else None
+            ),
+            "available": mem["available"],
         },
         "roofline": rep.row(),
         "collective_bytes": rep.collectives,
@@ -221,8 +246,12 @@ def main(argv=None) -> int:
                 print(f"[SKIP] {tag}: {rep['skipped']}", flush=True)
             else:
                 r = rep["roofline"]
+                m = rep["memory"]
+                mem_str = (
+                    f"{m['per_device_GB']:.2f}GB" if m["available"] else "n/a"
+                )
                 print(
-                    f"[OK]   {tag}: mem/dev={rep['memory']['per_device_GB']:.2f}GB "
+                    f"[OK]   {tag}: mem/dev={mem_str} "
                     f"bound={r['bound']} t=({r['t_compute_s']},{r['t_memory_s']},"
                     f"{r['t_collective_s']}) compile={rep['compile_s']}s",
                     flush=True,

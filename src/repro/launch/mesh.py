@@ -12,6 +12,14 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Context for entering ``mesh``: ``jax.set_mesh`` on jax ≥ 0.6, else the
+    Mesh object itself (a context manager on older jax)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.dist.sharding import arch_rules
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.models import build_model
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 
@@ -31,7 +31,7 @@ def main(argv=None):
     rules = arch_rules(cfg, mesh, step="decode", global_batch=args.slots)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         eng = ServeEngine(
             model, params,
             EngineConfig(batch_slots=args.slots, max_len=args.max_len), rules,

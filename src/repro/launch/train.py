@@ -15,7 +15,12 @@ from repro.configs import get_arch
 from repro.data.pipeline import SyntheticLMData
 from repro.dist.collectives import overlap_flags
 from repro.dist.sharding import arch_rules
-from repro.launch.mesh import describe, make_host_mesh, make_production_mesh
+from repro.launch.mesh import (
+    describe,
+    make_host_mesh,
+    make_production_mesh,
+    set_mesh,
+)
 from repro.models import build_model
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -53,7 +58,7 @@ def main(argv=None):
     )
     print(f"training {cfg.name} on mesh [{describe(mesh)}] "
           f"for {args.steps} steps")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         tr = Trainer(model, data, tcfg, rules)
         state, restarts = tr.run_with_restarts(jax.random.key(0))
     first = sum(state.losses[:10]) / max(len(state.losses[:10]), 1)

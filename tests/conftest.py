@@ -8,6 +8,9 @@ import numpy as np
 import pytest
 
 
+# the `slow` marker is registered in pyproject.toml [tool.pytest.ini_options]
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
