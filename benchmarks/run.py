@@ -10,12 +10,13 @@ import time
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, lm_roofline, paper_figs
+    from benchmarks import kernel_bench, lm_roofline, paper_figs, serve_bench
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernel_bench.bench
     suites["lm_roofline"] = lm_roofline.bench
+    suites["serve"] = serve_bench.bench
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name != only:

@@ -1,0 +1,167 @@
+"""Serving throughput bench: dense slot engine vs paged engine.
+
+Mixed-length Poisson traffic (8-128 token prompts, geometric interarrivals
+on the step clock) is driven through both engines at an EQUAL memory budget:
+the dense engine spends ``slots x max_len`` of cache; the paged engine gets
+exactly the same token budget as a page pool and spends it per actual
+request length, which buys it more concurrent decode lanes.  Reports
+tokens/s and page occupancy to stdout (CSV rows for ``benchmarks/run.py``)
+and a JSON report.
+
+Run:   PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
+Smoke: PYTHONPATH=src python benchmarks/serve_bench.py --smoke   (tier-1 CI)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def make_workload(n, lengths, max_new, mean_interarrival, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    arrivals = np.cumsum(rng.geometric(1.0 / mean_interarrival, size=n)) - 1
+    for i in range(n):
+        plen = int(rng.choice(lengths))
+        reqs.append(dict(
+            uid=i,
+            prompt=rng.integers(0, 512, size=(plen,)).astype(np.int32),
+            max_new_tokens=max_new,
+            arrival=int(arrivals[i]),
+        ))
+    return reqs
+
+
+def drive(engine, workload):
+    """Submit requests on the engine's step clock (arrival = step index);
+    returns (tokens, wall_seconds, steps)."""
+    from repro.serve.engine import Request
+
+    pending = sorted(workload, key=lambda r: r["arrival"])
+    live = []
+    step = 0
+    t0 = time.perf_counter()
+    while pending or getattr(engine, "load", 0) or any(
+        r is not None for r in getattr(engine, "slot_req", [])
+    ) or getattr(engine, "queue", []):
+        while pending and pending[0]["arrival"] <= step:
+            w = pending.pop(0)
+            req = Request(uid=w["uid"], prompt=w["prompt"],
+                          max_new_tokens=w["max_new_tokens"])
+            live.append(req)
+            engine.submit(req)
+        engine.step()
+        step += 1
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in live)
+    assert all(r.done for r in live), "bench drained with unfinished requests"
+    return tokens, dt, step
+
+
+def bench_pair(smoke: bool = False, seed: int = 0) -> dict:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.models.common import AxisRules, DEFAULT_RULES
+    from repro.serve.dense_engine import DenseSlotEngine
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    rules = AxisRules(DEFAULT_RULES)
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    if smoke:
+        lengths, max_new, n, max_len = (8, 16), 6, 4, 64
+        dense_slots, paged_lanes, page_size = 2, 3, 16
+    else:
+        lengths, max_new, n, max_len = (8, 16, 32, 64, 128), 16, 24, 160
+        dense_slots, paged_lanes, page_size = 4, 8, 16
+    budget_tokens = dense_slots * max_len          # the shared memory budget
+    n_pages = budget_tokens // page_size
+
+    def warmup(eng):
+        eng.submit(Request(uid=-1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2))
+        eng.run()
+
+    results = {}
+    dense = DenseSlotEngine(
+        model, params,
+        EngineConfig(batch_slots=dense_slots, max_len=max_len), rules,
+    )
+    warmup(dense)
+    toks, dt, steps = drive(dense, make_workload(
+        n, lengths, max_new, mean_interarrival=2, seed=seed))
+    results["dense"] = {
+        "tokens": toks, "seconds": dt, "tok_s": toks / dt, "steps": steps,
+        "slots": dense_slots, "cache_budget_tokens": budget_tokens,
+    }
+
+    paged = ServeEngine(
+        model, params,
+        EngineConfig(batch_slots=paged_lanes, max_len=max_len,
+                     page_size=page_size, n_pages=n_pages), rules,
+    )
+    warmup(paged)
+    toks, dt, steps = drive(paged, make_workload(
+        n, lengths, max_new, mean_interarrival=2, seed=seed))
+    tel = paged.telemetry()
+    results["paged"] = {
+        "tokens": toks, "seconds": dt, "tok_s": toks / dt, "steps": steps,
+        "lanes": paged_lanes, "page_size": page_size, "n_pages": n_pages,
+        "cache_budget_tokens": n_pages * page_size,
+        "page_occupancy_mean": tel["occupancy_mean"],
+        "page_occupancy_max": tel["occupancy_max"],
+        "preemptions": tel["preemptions"],
+    }
+    results["speedup"] = results["paged"]["tok_s"] / results["dense"]["tok_s"]
+    results["workload"] = {
+        "requests": n, "prompt_lengths": list(lengths), "max_new": max_new,
+        "smoke": smoke,
+    }
+    return results
+
+
+def bench():
+    """CSV rows for benchmarks/run.py (small non-smoke run)."""
+    r = bench_pair(smoke=True)
+    return [
+        ("serve.dense.tok_s", f"{r['dense']['tok_s']:.2f}", "tokens/s"),
+        ("serve.paged.tok_s", f"{r['paged']['tok_s']:.2f}", "tokens/s"),
+        ("serve.paged.speedup", f"{r['speedup']:.3f}", "x vs dense"),
+        ("serve.paged.occupancy_max",
+         f"{r['paged']['page_occupancy_max']:.3f}", "pool fraction"),
+    ]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few-step CI run (still writes the JSON report)")
+    ap.add_argument("--out", default="serve_bench.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    results = bench_pair(smoke=args.smoke, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, default=float)
+    d, p = results["dense"], results["paged"]
+    print(f"dense : {d['tok_s']:8.2f} tok/s  ({d['slots']} slots x "
+          f"{d['cache_budget_tokens'] // d['slots']} ctx = "
+          f"{d['cache_budget_tokens']} cache tokens)")
+    print(f"paged : {p['tok_s']:8.2f} tok/s  ({p['lanes']} lanes, "
+          f"{p['n_pages']} x {p['page_size']} pages = "
+          f"{p['cache_budget_tokens']} cache tokens, "
+          f"occupancy max {p['page_occupancy_max']:.2f}, "
+          f"{p['preemptions']} preemptions)")
+    print(f"speedup: {results['speedup']:.2f}x  -> {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

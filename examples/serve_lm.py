@@ -1,8 +1,10 @@
-"""Serve a small LM with batched requests: prefill + continuous-batching
-decode through the serving engine (the LM-suite analogue of the paper's
-SMC-network serving, each slot ≙ one cube's independent stream).
+"""Serve a small LM with batched requests: chunked prefill + paged-KV
+continuous-batching decode through the serving engine, optionally routed
+across SMC cube replicas (each cube ≙ one independently streaming SMC, the
+host only coordinates).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch qwen2.5-3b]
+      PYTHONPATH=src python examples/serve_lm.py --cubes 2 --policy spf
 """
 import argparse
 import time
@@ -14,6 +16,7 @@ from repro.configs import get_arch
 from repro.models import build_model
 from repro.models.common import AxisRules, DEFAULT_RULES
 from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.router import CubeRouter
 
 
 def main():
@@ -22,15 +25,24 @@ def main():
                     help="any assigned arch id (reduced config is served)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--policy", choices=["fcfs", "spf"], default="fcfs")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--cubes", type=int, default=1,
+                    help=">1 routes requests over cube-replica engines")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     rules = AxisRules(DEFAULT_RULES)
-    eng = ServeEngine(
-        model, params, EngineConfig(batch_slots=3, max_len=96), rules
+    ecfg = EngineConfig(
+        batch_slots=3, max_len=96, page_size=16,
+        policy=args.policy, prefill_chunk=args.prefill_chunk,
     )
+    if args.cubes > 1:
+        eng = CubeRouter(model, params, ecfg, n_cubes=args.cubes)
+    else:
+        eng = ServeEngine(model, params, ecfg, rules)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -47,6 +59,16 @@ def main():
     for r in sorted(done, key=lambda r: r.uid)[:3]:
         print(f"  req {r.uid}: prompt[:4]={list(r.prompt[:4])} -> "
               f"out={r.out_tokens}")
+    tel = eng.telemetry()
+    if args.cubes > 1:
+        for cube, t in tel.items():
+            if isinstance(t, dict):
+                print(f"  {cube}: routed={t['routed']} "
+                      f"occupancy_max={t['occupancy_max']:.2f}")
+    else:
+        print(f"  page occupancy mean={tel['occupancy_mean']:.2f} "
+              f"max={tel['occupancy_max']:.2f} "
+              f"preemptions={tel['preemptions']}")
     assert len(done) == args.requests
 
 

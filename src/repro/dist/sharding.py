@@ -25,7 +25,12 @@ from typing import Any
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.models.common import AxisRules, DEFAULT_RULES, PSpec
+from repro.models.common import (
+    AxisRules,
+    DEFAULT_RULES,
+    PSpec,
+    cache_leaf_key,
+)
 
 
 def _axis_sizes(mesh) -> dict[str, int]:
@@ -217,6 +222,43 @@ _CACHE_LEAF_AXES: dict[str, tuple] = {
 }
 
 
+# paged-pool logical axes, derived from the same table: a seq-carrying leaf
+# (batch, cache_seq, *tail) pools into (layers, pages, page_size, *tail) —
+# the page axis takes the sharding role, within-page seq stays local.
+_PAGED_CACHE_LEAF_AXES: dict[str, tuple] = {
+    name: ("layers", "pages", None) + axes[axes.index("cache_seq") + 1:]
+    for name, axes in _CACHE_LEAF_AXES.items()
+    if "cache_seq" in axes
+}
+
+
+def paged_cache_axes(cfg, tree):
+    """Logical-axis tree for a paged serving cache (``serve.paged_cache``
+    layout): seq leaves are page pools (layers, n_pages, page_size, *tail);
+    recurrent-state leaves keep the per-lane (layers, lanes, *tail) layout
+    with lanes as the batch axis."""
+
+    def leaf_axes(path, x):
+        ndim = len(x.shape)
+        base = _PAGED_CACHE_LEAF_AXES.get(cache_leaf_key(path))
+        if base is None:
+            base = ("layers", "batch")
+        return (tuple(base) + (None,) * ndim)[:ndim]
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, tree)
+
+
+def cube_rules(mesh) -> AxisRules:
+    """The cube-serving rule table (the serve router's entry point): batch
+    over (cube, data); weights, caches, and page pools replicated per cube —
+    each SMC holds its own coefficients and KV pages (§VI-C)."""
+    from repro.core.smc import cube_rules as _smc_cube_rules
+
+    rules = dict(_smc_cube_rules(mesh).rules)
+    rules["pages"] = None
+    return AxisRules(rules)
+
+
 def cache_axes(cfg, tree):
     """Tree of logical-axis tuples parallel to a decode-cache tree.
 
@@ -227,14 +269,8 @@ def cache_axes(cfg, tree):
     """
 
     def leaf_axes(path, x):
-        name = None
-        for entry in reversed(path):
-            key = getattr(entry, "key", None)
-            if isinstance(key, str):
-                name = key
-                break
         ndim = len(x.shape)
-        base = _CACHE_LEAF_AXES.get(name)
+        base = _CACHE_LEAF_AXES.get(cache_leaf_key(path))
         if base is None:
             base = ("batch",) + (None,) * max(ndim - 1, 0)
         if ndim == len(base) + 1:

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.tiling import choose_matmul_blocks
 from . import flash_attention as _fa
+from . import paged_attn as _pa
 from . import ssd_scan as _ssd
 from . import stream_gd as _gd
 from . import stream_mac_conv as _conv
@@ -159,6 +160,50 @@ def flash_attention(
         interpret=_interpret(interpret),
     )
     return out[:, :, :sq, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pool: jax.Array, block_table: jax.Array,
+                 interpret: bool | None = None):
+    """Block-table gather of a page pool: pool (n_pages, *page) + table
+    (B, P) → (B, P, *page); -1 entries read as zeros.  Arbitrary page tails
+    are flattened to one row per page (a page is one DMA burst)."""
+    n = pool.shape[0]
+    page_shape = pool.shape[1:]
+    flat = pool.reshape(n, -1)
+    f = flat.shape[1]
+    flat = _pad_to(flat, 1, 128)
+    out = _pa.paged_gather(flat, block_table.astype(jnp.int32),
+                           interpret=_interpret(interpret))
+    b, p = block_table.shape
+    return out[..., :f].reshape((b, p) + page_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(
+    q: jax.Array,             # (B, H, D) one decode token per lane
+    k_pool: jax.Array,        # (n_pages, PS, Hkv, D) — pool layout of the
+    v_pool: jax.Array,        #   paged serving cache
+    block_table: jax.Array,   # (B, P) int32, -1 = unallocated
+    lengths: jax.Array,       # (B,) int32 valid tokens per lane
+    scale: float | None = None,
+    interpret: bool | None = None,
+):
+    """Fused paged decode-attention read (GQA grouped, online softmax)."""
+    b, h, d = q.shape
+    n, ps, hkv, _ = k_pool.shape
+    rep = h // hkv
+    rep_p = rep + ((-rep) % 8)
+    dp = d + ((-d) % 128)
+    qg = _pad_to(_pad_to(q.reshape(b, hkv, rep, d), 2, rep_p), 3, dp)
+    kp = _pad_to(k_pool.transpose(2, 0, 1, 3), 3, dp)
+    vp = _pad_to(v_pool.transpose(2, 0, 1, 3), 3, dp)
+    out = _pa.paged_decode_attention(
+        qg, kp, vp, block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+        scale=float(scale) if scale is not None else float(d) ** -0.5,
+        interpret=_interpret(interpret),
+    )
+    return out[:, :, :rep, :d].reshape(b, h, d)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

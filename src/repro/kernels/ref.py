@@ -80,6 +80,45 @@ def flash_attention(
     return out.astype(q.dtype)
 
 
+def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Block-table gather oracle.  pool (n_pages, *page), block_table (B, P)
+    int32 with -1 = unallocated → (B, P, *page); -1 pages read as zeros."""
+    view = jnp.take(pool, jnp.clip(block_table, 0, pool.shape[0] - 1), axis=0)
+    mask = (block_table >= 0).reshape(block_table.shape + (1,) * (pool.ndim - 1))
+    return jnp.where(mask, view, jnp.zeros((), pool.dtype))
+
+
+def paged_decode_attention(
+    q: jax.Array,             # (B, Hkv, rep, D) one decode token per lane
+    k_pool: jax.Array,        # (Hkv, n_pages, PS, D)
+    v_pool: jax.Array,        # (Hkv, n_pages, PS, D)
+    block_table: jax.Array,   # (B, P) int32, -1 = unallocated
+    lengths: jax.Array,       # (B,) int32 valid tokens per lane
+    scale: float | None = None,
+) -> jax.Array:
+    """Gather-then-attend oracle for the fused paged decode read."""
+    b, hkv, rep, d = q.shape
+    _, _, ps, _ = k_pool.shape
+    p = block_table.shape[1]
+    scale = scale if scale is not None else float(d) ** -0.5
+    clipped = jnp.clip(block_table, 0, k_pool.shape[1] - 1)
+    k = jnp.take(k_pool, clipped, axis=1)          # (G, B, P, PS, D)
+    v = jnp.take(v_pool, clipped, axis=1)
+    k = k.transpose(1, 0, 2, 3, 4).reshape(b, hkv, p * ps, d)
+    v = v.transpose(1, 0, 2, 3, 4).reshape(b, hkv, p * ps, d)
+    s = jnp.einsum("bgrd,bgkd->bgrk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    kpos = jnp.arange(p * ps)
+    valid = (kpos[None] < lengths[:, None]) & jnp.repeat(
+        block_table >= 0, ps, axis=1
+    )
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(jnp.isnan(a), 0.0, a)
+    out = jnp.einsum("bgrk,bgkd->bgrd", a, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def ssd_scan(xh, b, c, dt, a):
     """Exact sequential SSD recurrence (oracle for kernels/ssd_scan)."""
     bsz, sl, h, p = xh.shape

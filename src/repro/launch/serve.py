@@ -1,9 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Reduced config on CPU; the production mesh path is proven by the dry-run's
-prefill/decode cells.
+prefill/decode cells.  ``--cubes N`` routes requests across N cube-replica
+engines (``serve.router.CubeRouter``); the scheduler/paged-cache knobs mirror
+``serve.engine.EngineConfig``.
 """
 import argparse
+import json
 import time
 
 import jax
@@ -14,6 +17,7 @@ from repro.dist.sharding import arch_rules
 from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.models import build_model
 from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.router import CubeRouter
 
 
 def main(argv=None):
@@ -24,6 +28,16 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page pool size (0 = dense-equivalent budget)")
+    ap.add_argument("--policy", choices=["fcfs", "spf"], default="fcfs")
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--max-step-tokens", type=int, default=0)
+    ap.add_argument("--cubes", type=int, default=1,
+                    help="route over N cube-replica engines")
+    ap.add_argument("--route", choices=["hash", "least_loaded"],
+                    default="least_loaded")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch).reduced()
@@ -31,11 +45,18 @@ def main(argv=None):
     rules = arch_rules(cfg, mesh, step="decode", global_batch=args.slots)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    ecfg = EngineConfig(
+        batch_slots=args.slots, max_len=args.max_len,
+        page_size=args.page_size, n_pages=args.pages or None,
+        policy=args.policy, prefill_chunk=args.prefill_chunk,
+        max_step_tokens=args.max_step_tokens,
+    )
     with set_mesh(mesh):
-        eng = ServeEngine(
-            model, params,
-            EngineConfig(batch_slots=args.slots, max_len=args.max_len), rules,
-        )
+        if args.cubes > 1:
+            eng = CubeRouter(model, params, ecfg, n_cubes=args.cubes,
+                             policy=args.route)
+        else:
+            eng = ServeEngine(model, params, ecfg, rules)
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             eng.submit(Request(
@@ -50,6 +71,7 @@ def main(argv=None):
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{cfg.name}: {len(done)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s")
+    print(json.dumps(eng.telemetry(), indent=2, default=float))
 
 
 if __name__ == "__main__":

@@ -71,6 +71,20 @@ def build_model(cfg: ArchConfig):
     return DecoderLM(cfg)
 
 
+def cache_page_specs(cfg_or_model, lanes: int, n_pages: int, page_size: int):
+    """Per-layer page-pool shapes of the paged serving cache (the public
+    entry the serve subsystem and sharding rules consume): every seq-dim
+    cache leaf becomes (layers, n_pages, page_size, *tail); recurrent-state
+    leaves keep their per-lane layout.  Accepts an ArchConfig or a built
+    model."""
+    model = (
+        cfg_or_model
+        if hasattr(cfg_or_model, "cache_page_specs")
+        else build_model(cfg_or_model)
+    )
+    return model.cache_page_specs(lanes, n_pages, page_size)
+
+
 # ---------------------------------------------------------------------------
 # Dry-run input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
 # ---------------------------------------------------------------------------

@@ -122,24 +122,36 @@ def decode_attention(
     k: jax.Array,                  # (B, Smax, Hkv, D) — cache
     v: jax.Array,
     *,
-    position: jax.Array,           # scalar: index of the new token
+    position: jax.Array,           # scalar or (B,): index of the new token
     window: int | None = None,
     scale: float | None = None,
 ) -> jax.Array:
-    """Single-token attention over a (possibly padded) KV cache."""
+    """Single-token attention over a (possibly padded) KV cache.
+
+    ``position`` may be a scalar (all rows at the same depth — the dense
+    slot engine) or a (B,) vector (per-slot depths — the paged engine's
+    ragged continuous batching).
+    """
     b, _, h, d = q.shape
     _, smax, hkv, _ = k.shape
     rep = h // hkv
     scale = scale if scale is not None else float(d) ** -0.5
+    position = jnp.asarray(position, jnp.int32)
     # no materialized f32 cast of the cache: bf16 reads, f32 MXU accumulate
     qf = (q.reshape(b, hkv, rep, d) * scale).astype(k.dtype)
     s = jnp.einsum("bgrd,bkgd->bgrk", qf, k,
                    preferred_element_type=jnp.float32)
     kpos = jnp.arange(smax, dtype=jnp.int32)
-    msk = kpos <= position                       # (Smax,)
-    if window is not None:
-        msk &= (position - kpos) < window
-    s = jnp.where(msk[None, None, None, :], s, NEG_INF)
+    if position.ndim:                            # per-slot (B,) positions
+        msk = kpos[None, :] <= position[:, None]       # (B, Smax)
+        if window is not None:
+            msk &= (position[:, None] - kpos[None, :]) < window
+        s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+    else:
+        msk = kpos <= position                   # (Smax,)
+        if window is not None:
+            msk &= (position - kpos) < window
+        s = jnp.where(msk[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)

@@ -109,7 +109,26 @@ DEFAULT_RULES = {
     "lru": "model",
     "ssm_heads": "model",
     "layers": None,
+    "pages": None,             # paged-KV pool page axis (per-cube pools)
 }
+
+# decode-cache leaf keys whose dim after batch is the cache sequence — these
+# are the leaves the paged serving cache splits into fixed-size pages
+# (attention k/v, enc-dec cross k/v, MLA latent + shared rotary key).
+# Recurrent state leaves (ssm "state"/"conv", rglru "h"/"conv") have no seq
+# dim and stay densely per-lane.  Keep in lockstep with
+# ``dist.sharding._CACHE_LEAF_AXES``.
+SEQ_CACHE_KEYS = ("k", "v", "ck", "cv", "latent", "k_rope")
+
+
+def cache_leaf_key(path) -> str | None:
+    """Innermost string dict key of a tree_map_with_path leaf path — the
+    cache-leaf name the tables above key on."""
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return None
 
 
 def constrain(x: jax.Array, rules: AxisRules, *axes: str | None) -> jax.Array:

@@ -39,7 +39,9 @@ def mla_specs(cfg) -> dict:
     }
 
 
-def _project_q(cfg, p, x, positions):
+def _project_q_at(cfg, p, x, rope_pos):
+    """rope_pos: broadcastable (..., S) absolute positions (e.g. (1,S) full
+    sequence, (B,1) per-slot decode)."""
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -47,16 +49,24 @@ def _project_q(cfg, p, x, positions):
     qa = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
     q = (qa @ p["wq_b"]).reshape(b, s, h, qk + qr)
     q_nope, q_rope = q[..., :qk], q[..., qk:]
-    q_rope = rope(q_rope, positions[None], cfg.rope_theta)
+    q_rope = rope(q_rope, rope_pos, cfg.rope_theta)
     return q_nope, q_rope
 
 
-def _latent_kv(cfg, p, x, positions):
+def _latent_kv_at(cfg, p, x, rope_pos):
     m = cfg.mla
     kv = x @ p["wkv_a"]                                   # (B,S,rank+qr)
     latent = rms_norm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
-    k_rope = rope(kv[..., m.kv_lora_rank:], positions[None], cfg.rope_theta)
+    k_rope = rope(kv[..., m.kv_lora_rank:], rope_pos, cfg.rope_theta)
     return latent, k_rope                                 # (B,S,rank),(B,S,qr)
+
+
+def _project_q(cfg, p, x, positions):
+    return _project_q_at(cfg, p, x, positions[None])
+
+
+def _latent_kv(cfg, p, x, positions):
+    return _latent_kv_at(cfg, p, x, positions[None])
 
 
 def mla_attention(
@@ -104,17 +114,30 @@ def mla_decode(
     h = cfg.n_heads
     qk, qr, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
     rank = m.kv_lora_rank
-    positions = jnp.full((1,), position, jnp.int32)
-
-    q_nope, q_rope = _project_q(cfg, p, x, positions)     # (B,1,H,qk/qr)
-    new_latent, new_krope = _latent_kv(cfg, p, x, positions)
-
-    latent = jax.lax.dynamic_update_slice_in_dim(
-        cache["latent"], new_latent.astype(cache["latent"].dtype), position, axis=1
-    )
-    k_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], new_krope.astype(cache["k_rope"].dtype), position, axis=1
-    )
+    position = jnp.asarray(position, jnp.int32)
+    per_slot = position.ndim == 1           # (B,) paged-serving depths
+    if per_slot:
+        q_nope, q_rope = _project_q_at(cfg, p, x, position[:, None])
+        new_latent, new_krope = _latent_kv_at(cfg, p, x, position[:, None])
+        rows = jnp.arange(b)
+        latent = cache["latent"].at[rows, position].set(
+            new_latent[:, 0].astype(cache["latent"].dtype)
+        )
+        k_rope = cache["k_rope"].at[rows, position].set(
+            new_krope[:, 0].astype(cache["k_rope"].dtype)
+        )
+    else:
+        positions = jnp.full((1,), position, jnp.int32)
+        q_nope, q_rope = _project_q(cfg, p, x, positions)     # (B,1,H,qk/qr)
+        new_latent, new_krope = _latent_kv(cfg, p, x, positions)
+        latent = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], new_latent.astype(cache["latent"].dtype), position,
+            axis=1
+        )
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], new_krope.astype(cache["k_rope"].dtype), position,
+            axis=1
+        )
     latent = constrain(latent, rules, "batch", "cache_seq", None)
 
     wk_b = p["wk_b"].reshape(rank, h, qk)
@@ -129,7 +152,11 @@ def mla_decode(
                         preferred_element_type=jnp.float32)
     s = (s_lat + s_rope) * scale                          # (B,H,1,Smax)
     kpos = jnp.arange(latent.shape[1], dtype=jnp.int32)
-    s = jnp.where((kpos <= position)[None, None, None], s, -1e30)
+    if per_slot:
+        s = jnp.where((kpos[None, :] <= position[:, None])[:, None, None, :],
+                      s, -1e30)
+    else:
+        s = jnp.where((kpos <= position)[None, None, None], s, -1e30)
     a = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhst,btr->bshr", a.astype(latent.dtype), latent,
                      preferred_element_type=jnp.float32)

@@ -31,6 +31,8 @@ from .common import (
     AxisRules,
     DEFAULT_RULES,
     PSpec,
+    SEQ_CACHE_KEYS,
+    cache_leaf_key,
     abstract_params,
     activation,
     constrain,
@@ -100,8 +102,41 @@ def attn_apply(cfg, p, x, rules, positions, window=None, impl="xla"):
 
 
 def attn_decode(cfg, p, x, cache, position, rules, window=None):
+    """One-token decode.  ``position`` is a scalar (all slots at the same
+    depth) or a (B,) vector (per-slot depths, paged serving)."""
     b, _, d = x.shape
-    positions = jnp.full((1,), position, jnp.int32)
+    position = jnp.asarray(position, jnp.int32)
+    per_slot = position.ndim == 1
+    rope_pos = position[:, None] if per_slot else jnp.full((1, 1), position,
+                                                          jnp.int32)
+    q, k, v = _qkv(cfg, p, x)
+    if not cfg.learned_positions:
+        q = rope(q, rope_pos, cfg.rope_theta)
+        k = rope(k, rope_pos, cfg.rope_theta)
+    if per_slot:
+        rows = jnp.arange(b)
+        kc = cache["k"].at[rows, position].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[rows, position].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), position, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), position, axis=1
+        )
+    kc = constrain(kc, rules, "batch", "cache_seq", "kv_heads", None)
+    vc = constrain(vc, rules, "batch", "cache_seq", "kv_heads", None)
+    out = decode_attention(q, kc, vc, position=position, window=window)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return y, {"k": kc, "v": vc}
+
+
+def attn_extend(cfg, p, x, cache, position, rules, window=None, impl="xla"):
+    """Chunked-prefill step: write a C-token chunk at [position, position+C)
+    into the cache view and attend it against everything cached so far (the
+    chunk's own causal prefix included via absolute q positions)."""
+    b, c, d = x.shape
+    positions = position + jnp.arange(c, dtype=jnp.int32)
     q, k, v = _qkv(cfg, p, x)
     if not cfg.learned_positions:
         q = rope(q, positions[None], cfg.rope_theta)
@@ -112,10 +147,11 @@ def attn_decode(cfg, p, x, cache, position, rules, window=None):
     vc = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v.astype(cache["v"].dtype), position, axis=1
     )
-    kc = constrain(kc, rules, "batch", "cache_seq", "kv_heads", None)
-    vc = constrain(vc, rules, "batch", "cache_seq", "kv_heads", None)
-    out = decode_attention(q, kc, vc, position=position, window=window)
-    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    out = attend(
+        q, kc, vc, causal=True, window=window, q_positions=positions,
+        kv_len=position + c, impl=impl, chunk=cfg.attn_chunk,
+    )
+    y = out.reshape(b, c, cfg.n_heads * cfg.hd) @ p["wo"]
     return y, {"k": kc, "v": vc}
 
 
@@ -267,6 +303,35 @@ def layer_decode(cfg, kind, p, x, cache, position, rules):
         x = x + mlp_apply(cfg, p["mlp"], h, rules)
     else:
         raise ValueError(kind)
+    return x, cache
+
+
+def layer_extend(cfg, kind, p, x, cache, position, rules):
+    """Multi-token extend (chunked prefill).  Only attention-state layer
+    kinds support it — recurrent kinds (ssm/rec) carry a stepwise state and
+    are prefilled whole-prompt (see ``DecoderLM.supports_chunked_prefill``)."""
+    if kind in ("dense", "moe"):
+        if cfg.mla:
+            raise NotImplementedError("chunked prefill: MLA absorbed extend")
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = attn_extend(cfg, p["attn"], h, cache, position, rules,
+                               cfg.sliding_window)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            y, _ = _moe.moe_ffn(cfg, p["moe"], h, rules, n_groups=1, drop=False)
+        else:
+            y = mlp_apply(cfg, p["mlp"], h, rules)
+        x = x + y
+    elif kind == "attn":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = attn_extend(cfg, p["attn"], h, cache, position, rules,
+                               cfg.rglru.attn_window)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    else:
+        raise NotImplementedError(f"chunked prefill over '{kind}' layers")
     return x, cache
 
 
@@ -561,6 +626,51 @@ class DecoderLM:
         logits = self._head(params, x, rules)
         return logits, new_caches
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when every layer kind can extend by a multi-token chunk
+        (attention caches only — recurrent state steps token-by-token, and
+        the MLA absorbed-extend form is not implemented)."""
+        kinds = {k for pattern, _ in self.segments for k in pattern}
+        return kinds <= {"dense", "moe", "attn"} and not self.cfg.mla
+
+    def extend_step(self, params, cache, tokens, position, rules=None):
+        """tokens (B, C), position scalar int32 → (logits (B, C, V), cache).
+        Writes the chunk's KV at [position, position+C) and attends against
+        the full cache view — the chunked-prefill counterpart of
+        ``decode_step`` (stacked decode cache layout only)."""
+        cfg = self.cfg
+        if cfg.decode_unroll_layers:
+            raise NotImplementedError("extend_step needs the stacked layout")
+        rules = rules or AxisRules(DEFAULT_RULES)
+        x = self._embed(params, tokens, rules)
+        new_caches = []
+        for si, (pattern, reps) in enumerate(self.segments):
+            def body(h, xs, _pattern=pattern):
+                pslice, cs = xs
+                new_cs = {}
+                for i, kind in enumerate(_pattern):
+                    key = f"s{i}_{kind}"
+                    h, c = layer_extend(
+                        cfg, kind, pslice[key], h, cs[key], position, rules
+                    )
+                    new_cs[key] = c
+                return h, new_cs
+
+            if cfg.scan_layers and reps > 1:
+                x, new_cache = jax.lax.scan(body, x, (params[f"seg{si}"], cache[si]))
+            else:
+                slices = []
+                for r in range(reps):
+                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    cslice = jax.tree.map(lambda a: a[r], cache[si])
+                    x, c = body(x, (pslice, cslice))
+                    slices.append(c)
+                new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+            new_caches.append(new_cache)
+        logits = self._head(params, x, rules)
+        return logits, new_caches
+
     # -- cache / inputs -----------------------------------------------------
 
     def cache_specs(self, batch: int, max_len: int):
@@ -578,6 +688,39 @@ class DecoderLM:
                     )
                 )
         return out
+
+    def cache_page_specs(self, lanes: int, n_pages: int, page_size: int):
+        """Pool specs for the paged serving cache.
+
+        Same pytree structure as ``cache_specs(lanes, page_size)``, but every
+        sequence-carrying leaf (``SEQ_CACHE_KEYS``) swaps its lane dim for a
+        page-pool dim: (reps, n_pages, page_size, *tail).  Leaves without a
+        seq dim (recurrent state) keep the per-lane layout — they are the
+        "one page per request" state the scheduler never splits.
+        """
+        specs = self.cache_specs(lanes, page_size)
+
+        def leaf(path, s):
+            name = cache_leaf_key(path)
+            if name not in SEQ_CACHE_KEYS:
+                return s
+            bdim = seq_leaf_batch_dim(name, len(s.shape))
+            shape = s.shape[:bdim] + (n_pages,) + s.shape[bdim + 1:]
+            return jax.ShapeDtypeStruct(shape, s.dtype)
+
+        return jax.tree_util.tree_map_with_path(leaf, specs)
+
+
+# batch-led rank of each seq-carrying cache leaf (k/v: (B,S,H,D); MLA
+# latent/k_rope: (B,S,R)); a higher observed rank means a leading layers dim
+_SEQ_LEAF_BASE_RANK = {"k": 4, "v": 4, "ck": 4, "cv": 4, "latent": 3,
+                       "k_rope": 3}
+
+
+def seq_leaf_batch_dim(name: str, ndim: int) -> int:
+    """Index of the lane/batch dim of a seq cache leaf (0 per-layer layout,
+    1 stacked layout); the seq dim is always the next one."""
+    return 1 if ndim == _SEQ_LEAF_BASE_RANK[name] + 1 else 0
 
 
 def cache_window(cfg) -> int:

@@ -1,0 +1,11 @@
+"""Serving subsystem: paged-KV continuous batching over an SMC cube mesh.
+
+``engine.ServeEngine`` (paged KV + scheduler) is the serving path;
+``router.CubeRouter`` spreads requests over CUBE_AXIS replicas;
+``dense_engine.DenseSlotEngine`` is the v1 reference the paged engine is
+proven bit-exact against.
+"""
+from .engine import EngineConfig, Request, ServeEngine          # noqa: F401
+from .paged_cache import PageAllocator, PagedKVCache            # noqa: F401
+from .router import CubeRouter                                  # noqa: F401
+from .scheduler import Scheduler, SchedulerConfig               # noqa: F401

@@ -1,0 +1,132 @@
+"""The v1 fixed-slot serving engine (kept as the paged engine's reference).
+
+A fixed-size slot array over a dense ``batch_slots x max_len`` decode cache;
+finished slots are refilled from the queue (continuous batching); prefill
+runs per-request and its cache is packed into the slot's row.  Every slot
+pays ``max_len`` of cache whatever the request length, and all slots step at
+the shared max position — the two costs ``serve.engine.ServeEngine`` (paged
+KV + per-lane positions) removes.  ``tests/test_serve.py`` proves the paged
+engine bit-exact against this one on greedy decoding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import EngineConfig, Request, stacked_decode_model
+
+
+class DenseSlotEngine:
+    """Greedy/temperature sampling over a dense per-slot decode cache."""
+
+    def __init__(self, model, params, ecfg: EngineConfig, rules=None):
+        model = stacked_decode_model(model)
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.rules = rules
+        self.cfg = model.cfg
+        b, m = ecfg.batch_slots, ecfg.max_len
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), model.cache_specs(b, m)
+        )
+        self.slot_req: list[Request | None] = [None] * b
+        self.slot_pos = np.zeros(b, np.int32)      # next write position
+        self.queue: list[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- jitted pieces --------------------------------------------------------
+
+    def _decode_impl(self, params, cache, tokens, position):
+        return self.model.decode_step(params, cache, tokens, position, self.rules)
+
+    # -- request handling ------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _finished(self, req: Request, tok: int, pos: int) -> bool:
+        return (
+            len(req.out_tokens) >= req.max_new_tokens
+            or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
+            or pos >= self.ecfg.max_len - 1
+        )
+
+    def _fill_slot(self, slot: int, req: Request) -> bool:
+        """Prefill one request and pack its cache into the slot row.
+        Returns False when the request finished on its prefill token (early
+        EOS or max_new_tokens == 1) — the slot stays free for the next
+        request in the queue."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache = self.model.prefill(
+            self.params, prompt, self.rules, max_len=self.ecfg.max_len
+        )
+        s = prompt.shape[1]
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        if self._finished(req, tok, s):
+            req.done = True
+            return False
+
+        def pack(big, small):
+            # big: (reps, B, ...); small: (reps, 1, ...) with seq dims = s
+            if big.ndim >= 3 and small.shape[2:3] != big.shape[2:3] and small.ndim == big.ndim:
+                pad = [(0, 0)] * small.ndim
+                pad[2] = (0, big.shape[2] - small.shape[2])
+                small = jnp.pad(small, pad)
+            return big.at[:, slot: slot + 1].set(small.astype(big.dtype))
+
+        self.cache = jax.tree.map(pack, self.cache, cache)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = s
+        return True
+
+    def _refill(self):
+        for i in range(self.ecfg.batch_slots):
+            while self.slot_req[i] is None and self.queue:
+                if self._fill_slot(i, self.queue.pop(0)):
+                    break
+
+    def step(self, key=None):
+        """One decode step for every active slot (single shared position —
+        slots are stepped at their own positions via per-slot masking)."""
+        self._refill()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        b = self.ecfg.batch_slots
+        last = np.zeros((b, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slot_req[i].out_tokens[-1]
+        # engine invariant: slots advance together; positions tracked per slot
+        pos = int(max(self.slot_pos[i] for i in active))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(last), jnp.asarray(pos, jnp.int32)
+        )
+        logits = np.asarray(logits[:, 0], np.float32)
+        for i in active:
+            req = self.slot_req[i]
+            if req.temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = int(jax.random.categorical(sub, jnp.asarray(logits[i]) / req.temperature))
+            else:
+                tok = int(np.argmax(logits[i]))
+            req.out_tokens.append(tok)
+            self.slot_pos[i] = pos + 1
+            if self._finished(req, tok, self.slot_pos[i]):
+                req.done = True
+                self.slot_req[i] = None
+        return True
+
+    def run(self, key=None) -> list[Request]:
+        done: list[Request] = []
+        seen: set[int] = set()
+        all_reqs = list(self.queue)
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step(key)
+            for r in all_reqs:
+                if r.done and r.uid not in seen:
+                    seen.add(r.uid)
+                    done.append(r)
+        return done

@@ -1,21 +1,41 @@
-"""Batched serving engine: prefill + decode with continuous batching.
+"""Paged continuous-batching serving engine (serve v2).
 
-The engine mirrors the paper's SMC-network serving pattern: requests stream
-in (the "camera"), slots process independently (each slot ≙ one cube's
-image), and the host only coordinates.  Implementation: a fixed-size slot
-array over the decode batch; finished slots are refilled from the queue
-(continuous batching); prefill runs per-request and its cache is packed into
-the slot's row of the decode cache.
+The v1 engine was a fixed-slot array over a dense ``batch_slots x max_len``
+cache; this engine is a thin step loop over three parts the paper's
+SMC-network serving pattern maps onto directly:
+
+* ``paged_cache.PagedKVCache`` — KV state lives in fixed-size pages handed
+  out by a free list (near-memory vault pages), so a short request costs
+  pages proportional to its length, not ``max_len``;
+* ``scheduler.Scheduler`` — admission control, prefill chunking, FCFS /
+  shortest-prompt-first ordering, and preempt-longest-running when the pool
+  runs dry (the host only coordinates — it never touches the stream);
+* the model's ``decode_step`` over gathered per-lane views with *per-lane*
+  positions — lanes advance independently (true continuous batching), unlike
+  v1's shared-max-position stepping which attended zero padding on ragged
+  batches.
+
+The greedy/temperature sampling API (``Request``, ``submit``, ``step``,
+``run``) is unchanged from v1; the dense engine survives as
+``serve.dense_engine.DenseSlotEngine`` (the bit-exactness reference).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .paged_cache import (
+    PagedKVCache,
+    absorb_decode,
+    gather_lane_view,
+    gather_views,
+    scatter_lane_view,
+)
+from .scheduler import Scheduler, SchedulerConfig
 
 
 @dataclass
@@ -30,120 +50,315 @@ class Request:
 
 @dataclass
 class EngineConfig:
-    batch_slots: int = 4
-    max_len: int = 256
+    batch_slots: int = 4            # decode lanes (compute width, not memory)
+    max_len: int = 256              # per-request context capacity
     eos_id: int | None = None
+    # paged-KV pool (memory width; defaults to the v1 dense budget)
+    page_size: int = 16
+    n_pages: int | None = None      # None → batch_slots * max_len / page_size
+    # scheduler
+    policy: str = "fcfs"            # fcfs | spf
+    max_step_tokens: int = 0        # 0 = unbounded per-step token budget
+    prefill_chunk: int = 0          # 0 = whole-prompt prefill
+    # paged read path: 'xla' advanced-indexing gather, or 'pallas' for the
+    # kernels/paged_attn read kernel (interpret mode off-TPU)
+    gather_impl: str = "xla"
+
+
+def stacked_decode_model(model):
+    """Return ``model`` rebuilt on the stacked decode-cache layout if needed.
+
+    The serving engines pack per-request caches into stacked
+    ``(layers, B, ...)`` buffers — the page pools index layers as one leading
+    dim and share one block table across layers.  A model built with
+    ``decode_unroll_layers=True`` (the training/dry-run §Perf layout) instead
+    emits per-layer cache *lists* whose leaves alias via donation, which
+    cannot be packed per-slot; rebuild it stacked.
+    """
+    if getattr(model.cfg, "decode_unroll_layers", False):
+        from repro.models.api import build_model
+
+        model = build_model(
+            dataclasses.replace(model.cfg, decode_unroll_layers=False)
+        )
+    return model
 
 
 class ServeEngine:
-    """Greedy/temperature sampling over the DecoderLM serving API."""
+    """Greedy/temperature sampling over the DecoderLM serving API, backed by
+    a paged KV cache and a request scheduler."""
 
     def __init__(self, model, params, ecfg: EngineConfig, rules=None):
-        import dataclasses
-
-        from repro.models.api import build_model
-
-        # the engine packs per-slot caches into stacked buffers; use the
-        # stacked decode layout (the unrolled layout is the production
-        # serving path proven by the dry-run)
-        if model.cfg.decode_unroll_layers:
-            model = build_model(
-                dataclasses.replace(model.cfg, decode_unroll_layers=False)
-            )
+        model = stacked_decode_model(model)
         self.model = model
         self.params = params
         self.ecfg = ecfg
         self.rules = rules
         self.cfg = model.cfg
-        b, m = ecfg.batch_slots, ecfg.max_len
-        self.cache = jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype), model.cache_specs(b, m)
+        ps = ecfg.page_size
+        n_pages = (
+            ecfg.n_pages
+            if ecfg.n_pages is not None
+            else ecfg.batch_slots * -(-ecfg.max_len // ps)
         )
-        self.slot_req: list[Request | None] = [None] * b
-        self.slot_pos = np.zeros(b, np.int32)      # next write position
-        self.queue: list[Request] = []
-        self._decode = jax.jit(self._decode_impl)
+        self.cache = PagedKVCache(
+            model, lanes=ecfg.batch_slots, n_pages=n_pages, page_size=ps,
+            max_len=ecfg.max_len,
+        )
+        chunk = ecfg.prefill_chunk if model.supports_chunked_prefill else 0
+        self.sched = Scheduler(SchedulerConfig(
+            policy=ecfg.policy, max_step_tokens=ecfg.max_step_tokens,
+            prefill_chunk=chunk,
+        ))
+        self.completed: list[Request] = []
+        self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+                      "occupancy_sum": 0.0, "occupancy_max": 0.0}
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._extend = jax.jit(self._extend_impl, donate_argnums=(1,))
+        # whole-prompt prefill, jit-cached per prompt length (the dense v1
+        # engine ran this eagerly — measured prefill-bound on mixed traffic)
+        self._prefill = jax.jit(
+            lambda params, toks: self.model.prefill(params, toks, self.rules)
+        )
 
     # -- jitted pieces --------------------------------------------------------
 
-    def _decode_impl(self, params, cache, tokens, position):
-        return self.model.decode_step(params, cache, tokens, position, self.rules)
+    def _decode_impl(self, params, pools, bt, tokens, positions, active):
+        views = gather_views(pools, bt, impl=self.ecfg.gather_impl)
+        logits, new_views = self.model.decode_step(
+            params, views, tokens, positions, self.rules
+        )
+        pools = absorb_decode(
+            pools, new_views, bt, positions, active, self.cache.page_size
+        )
+        return logits, pools
+
+    def _extend_impl(self, params, pools, pages, tokens, start):
+        views = gather_lane_view(pools, pages)
+        logits, new_views = self.model.extend_step(
+            params, views, tokens, start, self.rules
+        )
+        pools = scatter_lane_view(pools, pages, new_views,
+                                  self.cache.page_size)
+        return logits, pools
 
     # -- request handling ------------------------------------------------------
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        need = self.cache.pages_for(len(req.prompt) + 1)
+        if len(req.prompt) >= self.ecfg.max_len - 1:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the "
+                f"{self.ecfg.max_len}-token context limit"
+            )
+        if need > self.cache.n_pages:
+            raise ValueError(
+                f"prompt needs {need} pages, pool has {self.cache.n_pages}"
+            )
+        self.sched.add(req)
 
-    def _fill_slot(self, slot: int, req: Request):
-        """Prefill one request and pack its cache into the slot row."""
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, cache = self.model.prefill(
-            self.params, prompt, self.rules, max_len=self.ecfg.max_len
+    # -- prefill ---------------------------------------------------------------
+
+    def _run_prefill_chunk(self, st, chunk: int):
+        toks = st.resume_tokens[st.prefilled: st.prefilled + chunk]
+        # -1-pad the page list to the fixed per-lane width so _extend keeps
+        # one jit signature per chunk length (padding pages gather as zeros
+        # and are dropped on scatter), instead of retracing per page count
+        pages = np.full(self.cache.pages_per_lane, -1, np.int32)
+        pages[: len(st.pages)] = st.pages
+        logits, self.cache.pools = self._extend(
+            self.params, self.cache.pools, jnp.asarray(pages),
+            jnp.asarray(toks, jnp.int32)[None],
+            jnp.asarray(st.prefilled, jnp.int32),
         )
-        s = prompt.shape[1]
+        st.prefilled += chunk
+        st.last_logits = logits[0, -1]
+        self.stats["prefill_tokens"] += chunk
 
-        def pack(big, small):
-            # big: (reps, B, ...); small: (reps, 1, ...) with seq dims = s
-            if big.ndim >= 3 and small.shape[2:3] != big.shape[2:3] and small.ndim == big.ndim:
-                pad = [(0, 0)] * small.ndim
-                pad[2] = (0, big.shape[2] - small.shape[2])
-                small = jnp.pad(small, pad)
-            return big.at[:, slot: slot + 1].set(small.astype(big.dtype))
+    def _run_prefill_whole(self, st):
+        toks = jnp.asarray(st.resume_tokens, jnp.int32)[None]
+        logits, pcache = self._prefill(self.params, toks)
+        self.cache.write_prefill(st.pages, pcache)
+        # recurrent-state leaves need a lane row; hold the cache until one
+        # is assigned (seq leaves are already in the pages)
+        st.state_cache = pcache if self.cache.has_state_leaves() else None
+        st.prefilled = len(st.resume_tokens)
+        st.last_logits = logits[0, -1]
+        self.stats["prefill_tokens"] += len(st.resume_tokens)
 
-        self.cache = jax.tree.map(pack, self.cache, cache)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = s
-        tok = int(jnp.argmax(logits[0, -1]))
-        req.out_tokens.append(tok)
-
-    def _refill(self):
-        for i in range(self.ecfg.batch_slots):
-            if self.slot_req[i] is None and self.queue:
-                self._fill_slot(i, self.queue.pop(0))
-
-    def step(self, key=None):
-        """One decode step for every active slot (single shared position —
-        slots are stepped at their own positions via per-slot masking)."""
-        self._refill()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+    def _finish_prefill(self, st) -> bool:
+        """Sample the prefill token; True if the request finished without
+        ever taking a lane (early EOS / max_new_tokens == 1)."""
+        st.length = len(st.resume_tokens)
+        req = st.req
+        if st.is_resume:
+            # recompute-resume: the continuation token was already sampled
+            # before preemption — discard the re-derived logits
+            st.pending_token = int(req.out_tokens[-1])
             return False
-        b = self.ecfg.batch_slots
-        last = np.zeros((b, 1), np.int32)
-        for i in active:
-            last[i, 0] = self.slot_req[i].out_tokens[-1]
-        # engine invariant: slots advance together; positions tracked per slot
-        pos = int(max(self.slot_pos[i] for i in active))
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(last), jnp.asarray(pos, jnp.int32)
+        tok = int(jnp.argmax(st.last_logits))
+        req.out_tokens.append(tok)
+        st.pending_token = tok
+        if (
+            len(req.out_tokens) >= req.max_new_tokens
+            or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
+        ):
+            self._retire(st)
+            return True
+        return False
+
+    def _retire(self, st):
+        st.req.done = True
+        self.cache.allocator.free(st.pages)
+        st.pages = []
+        if st.lane >= 0:
+            self.cache.clear_lane(st.lane)
+            self.sched.running.pop(st.lane, None)
+            st.lane = -1
+        self.completed.append(st.req)
+
+    # -- decode ----------------------------------------------------------------
+
+    def _ensure_pages(self):
+        """Every running lane needs a page slot for its next write position;
+        preempt the longest-running request when the pool is dry."""
+        for lane in sorted(list(self.sched.running)):
+            st = self.sched.running.get(lane)
+            if st is None:
+                continue                      # preempted by an earlier lane
+            while len(st.pages) * self.cache.page_size <= st.length:
+                got = self.cache.allocator.alloc(1)
+                if got is not None:
+                    self.cache.extend_lane(lane, got[0], len(st.pages))
+                    st.pages.append(got[0])
+                    continue
+                victim = self.sched.pick_victim(exclude_lane=lane)
+                if victim is None or victim is st:
+                    raise RuntimeError(
+                        "page pool exhausted with no preemptible request — "
+                        "grow EngineConfig.n_pages"
+                    )
+                self.sched.preempt(victim, self.cache)
+
+    def _decode_lanes(self, key):
+        s, b = self.sched, self.ecfg.batch_slots
+        tokens = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for lane, st in s.running.items():
+            tokens[lane, 0] = st.pending_token
+            positions[lane] = st.length
+            active[lane] = True
+        logits, self.cache.pools = self._decode(
+            self.params, self.cache.pools,
+            jnp.asarray(self.cache.block_tables),
+            jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(active),
         )
         logits = np.asarray(logits[:, 0], np.float32)
-        for i in active:
-            req = self.slot_req[i]
+        for lane in sorted(list(s.running)):
+            st = s.running[lane]
+            req = st.req
             if req.temperature > 0 and key is not None:
                 key, sub = jax.random.split(key)
-                tok = int(jax.random.categorical(sub, jnp.asarray(logits[i]) / req.temperature))
+                tok = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[lane]) / req.temperature
+                ))
             else:
-                tok = int(np.argmax(logits[i]))
+                tok = int(np.argmax(logits[lane]))
             req.out_tokens.append(tok)
-            self.slot_pos[i] = pos + 1
+            st.length += 1
+            st.pending_token = tok
+            self.stats["decode_tokens"] += 1
             if (
                 len(req.out_tokens) >= req.max_new_tokens
-                or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
-                or self.slot_pos[i] >= self.ecfg.max_len - 1
+                or (self.ecfg.eos_id is not None
+                    and tok == self.ecfg.eos_id)
+                # cap at max_len, not the page-rounded capacity, to match
+                # the dense engine's truncation exactly
+                or st.length >= self.ecfg.max_len - 1
             ):
-                req.done = True
-                self.slot_req[i] = None
+                self._retire(st)
+
+    # -- step loop -------------------------------------------------------------
+
+    def step(self, key=None) -> bool:
+        """One scheduling round: admissions → prefill chunks → lane
+        assignment → one batched decode step.  Returns False when idle."""
+        s, c = self.sched, self.ecfg
+        if s.load == 0:
+            return False
+        budget = c.max_step_tokens or (1 << 30)
+        budget = max(budget - len(s.running), 0)
+
+        progressed = bool(s.admissions(self.cache, budget))
+        for st in list(s.prefilling):
+            chunk = s.chunk_for(st)
+            if s.cfg.prefill_chunk > 0:
+                chunk = min(chunk, budget)
+            elif budget <= 0:
+                chunk = 0                      # whole-prompt: chunk-granular
+            if chunk <= 0:
+                continue
+            if s.cfg.prefill_chunk > 0:
+                self._run_prefill_chunk(st, chunk)
+            else:
+                self._run_prefill_whole(st)
+            budget -= chunk
+            progressed = True
+            if st.remaining_prefill == 0:
+                s.prefilling.remove(st)
+                if not self._finish_prefill(st):
+                    s.ready.append(st)
+
+        free_lanes = [l for l in range(c.batch_slots) if l not in s.running]
+        while s.ready and free_lanes:
+            st = s.ready.pop(0)
+            lane = free_lanes.pop(0)
+            st.lane = lane
+            self.cache.assign_lane(lane, st.pages)
+            if getattr(st, "state_cache", None) is not None:
+                self.cache.write_state(lane, st.state_cache)
+                st.state_cache = None
+            s.running[lane] = st
+
+        if s.running:
+            self._ensure_pages()
+            self._decode_lanes(key)
+            progressed = True
+
+        if not progressed and s.load:
+            raise RuntimeError(
+                "scheduler stalled: waiting requests cannot be admitted "
+                "(page pool too small for the oldest request?)"
+            )
+        occ = self.cache.occupancy()
+        self.stats["steps"] += 1
+        self.stats["occupancy_sum"] += occ
+        self.stats["occupancy_max"] = max(self.stats["occupancy_max"], occ)
         return True
 
     def run(self, key=None) -> list[Request]:
-        done: list[Request] = []
-        seen: set[int] = set()
-        all_reqs = list(self.queue)
-        while self.queue or any(r is not None for r in self.slot_req):
-            self.step(key)
-            for r in all_reqs:
-                if r.done and r.uid not in seen:
-                    seen.add(r.uid)
-                    done.append(r)
-        return done
+        done_mark = len(self.completed)
+        while self.sched.load:
+            if key is not None:
+                key, step_key = jax.random.split(key)
+            else:
+                step_key = None
+            self.step(step_key)
+        return self.completed[done_mark:]
+
+    # -- telemetry (the router's queue-depth signal) ---------------------------
+
+    @property
+    def load(self) -> int:
+        return self.sched.load
+
+    def telemetry(self) -> dict:
+        st = dict(self.stats)
+        occ_sum = st.pop("occupancy_sum")
+        st["occupancy_mean"] = occ_sum / st["steps"] if st["steps"] else 0.0
+        st["queue_depth"] = self.sched.queue_depth()
+        st["running"] = len(self.sched.running)
+        st["preemptions"] = self.sched.n_preemptions
+        st["page_occupancy"] = self.cache.occupancy()
+        return st

@@ -1,0 +1,247 @@
+"""Block-table paged KV cache over the model's ``cache_specs`` layouts.
+
+The dense slot engine allocates ``batch_slots x max_len`` of cache and wastes
+``max_len - len(request)`` of it on every short request.  Here the cache is a
+pool of fixed-size pages plus a per-lane block table — the serving analogue
+of the paper's vault-interleaved SMC memory: request state lives scattered
+across near-memory pages, a free-list hands pages out on demand, and the
+decode step streams each lane's pages through the compute.
+
+Layout (stacked decode layout, ``decode_unroll_layers=False``):
+
+* seq-carrying leaves (``SEQ_CACHE_KEYS``: attention k/v, MLA latent/k_rope)
+  become pools ``(layers, n_pages, page_size, *tail)`` shared by all lanes;
+* recurrent-state leaves (SSD state, RG-LRU h, conv rings) keep the per-lane
+  ``(layers, lanes, *tail)`` layout — fixed-size state is its own "page".
+
+``gather_views`` / ``absorb_decode`` are pure-jnp tree transforms used inside
+the engine's jitted decode; the Pallas read kernel (``kernels/paged_attn``)
+is selectable via ``impl='pallas'``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import SEQ_CACHE_KEYS, cache_leaf_key
+
+
+def _is_seq(path) -> bool:
+    return cache_leaf_key(path) in SEQ_CACHE_KEYS
+
+
+# ---------------------------------------------------------------------------
+# Free-list page allocator (host side)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """LIFO free list over ``n_pages`` physical pages."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n pages, or None (and no allocation) if the pool can't cover it."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# Pure tree transforms (run inside the engine's jitted decode)
+# ---------------------------------------------------------------------------
+
+
+def gather_views(pools, block_tables: jax.Array, impl: str = "xla"):
+    """Materialize per-lane contiguous views from the page pools.
+
+    seq leaves: (layers, n_pages, PS, *t) + table (lanes, P) →
+    (layers, lanes, P*PS, *t); unallocated (-1) pages read as zeros so a
+    fresh lane's view is bit-identical to the dense engine's zero-init
+    cache.  State leaves pass through unchanged.
+    """
+
+    def leaf(path, x):
+        if not _is_seq(path):
+            return x
+        reps, n, ps = x.shape[0], x.shape[1], x.shape[2]
+        lanes, p = block_tables.shape
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+
+            # (n, layers, PS, *t) page rows → (lanes, P, layers, PS, *t)
+            got = kops.paged_gather(jnp.moveaxis(x, 0, 1), block_tables)
+            view = jnp.moveaxis(got, 2, 0)            # (layers, lanes, P, PS, *t)
+        else:
+            view = jnp.take(x, jnp.clip(block_tables, 0, n - 1), axis=1)
+            mask = (block_tables >= 0).reshape(
+                (1, lanes, p) + (1,) * (view.ndim - 3)
+            )
+            view = jnp.where(mask, view, jnp.zeros((), x.dtype))
+        return view.reshape((reps, lanes, p * ps) + x.shape[3:])
+
+    return jax.tree_util.tree_map_with_path(leaf, pools)
+
+
+def absorb_decode(pools, new_views, block_tables, positions, active,
+                  page_size: int):
+    """Fold one decode step's cache updates back into the pools.
+
+    seq leaves: scatter the column each lane wrote at ``positions`` into its
+    page (inactive lanes scatter to page -1 → dropped).  State leaves: keep
+    the new state only for active lanes.
+    """
+    lanes = positions.shape[0]
+    rows = jnp.arange(lanes)
+
+    def leaf(path, pool, view):
+        if _is_seq(path):
+            col = view[:, rows, positions]              # (layers, lanes, *t)
+            page = jnp.take_along_axis(
+                block_tables, (positions // page_size)[:, None], axis=1
+            )[:, 0]
+            # inactive/unallocated lanes must scatter out of bounds so
+            # mode='drop' discards them — a negative index is NOT out of
+            # bounds (jax normalizes it to n_pages-1 first, corrupting the
+            # last physical page), so the sentinel is n_pages
+            page = jnp.where(active & (page >= 0), page, pool.shape[1])
+            off = positions % page_size
+            return pool.at[:, page, off].set(col.astype(pool.dtype),
+                                             mode="drop")
+        keep = active.reshape((1, lanes) + (1,) * (pool.ndim - 2))
+        return jnp.where(keep, view.astype(pool.dtype), pool)
+
+    return jax.tree_util.tree_map_with_path(leaf, pools, new_views)
+
+
+def gather_lane_view(pools, pages: jax.Array):
+    """Single-request contiguous view from its own pages (chunked prefill):
+    seq leaves → (layers, 1, n_req_pages*PS, *t); state leaves pass."""
+    return gather_views(pools, pages[None])
+
+
+def scatter_lane_view(pools, pages: jax.Array, views, page_size: int):
+    """Write a single-request view (chunked-prefill output) back into its
+    pages wholesale.  ``pages`` may be -1-padded to a fixed width (one jit
+    signature per chunk length); padding entries are dropped via the same
+    out-of-bounds sentinel as ``absorb_decode``."""
+
+    def leaf(path, pool, view):
+        if not _is_seq(path):
+            return pool                     # state untouched by extend_step
+        reps = pool.shape[0]
+        n_req = pages.shape[0]
+        paged = view.reshape((reps, n_req, page_size) + pool.shape[3:])
+        safe = jnp.where(pages >= 0, pages, pool.shape[1])
+        return pool.at[:, safe].set(paged.astype(pool.dtype), mode="drop")
+
+    return jax.tree_util.tree_map_with_path(leaf, pools, views)
+
+
+# ---------------------------------------------------------------------------
+# The cache object (pools + tables + allocator)
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache:
+    """Page pools + per-lane block tables + free list for one engine."""
+
+    def __init__(self, model, lanes: int, n_pages: int, page_size: int,
+                 max_len: int):
+        if not hasattr(model, "cache_page_specs"):
+            raise TypeError(
+                f"{type(model).__name__} has no paged-cache layout "
+                "(cache_page_specs); serve it with the dense slot engine"
+            )
+        self.model = model
+        self.lanes = lanes
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.pages_per_lane = math.ceil(max_len / page_size)
+        self.capacity = self.pages_per_lane * page_size   # per-lane view len
+        specs = model.cache_page_specs(lanes, n_pages, page_size)
+        self.pools = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs
+        )
+        self.allocator = PageAllocator(n_pages)
+        self.block_tables = np.full((lanes, self.pages_per_lane), -1, np.int32)
+
+    # -- host-side bookkeeping ---------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    def alloc(self, n_tokens: int) -> list[int] | None:
+        return self.allocator.alloc(self.pages_for(n_tokens))
+
+    def assign_lane(self, lane: int, pages: list[int]) -> None:
+        self.block_tables[lane] = -1
+        self.block_tables[lane, : len(pages)] = pages
+
+    def extend_lane(self, lane: int, page: int, n_owned: int) -> None:
+        self.block_tables[lane, n_owned] = page
+
+    def clear_lane(self, lane: int) -> None:
+        self.block_tables[lane] = -1
+
+    def occupancy(self) -> float:
+        return 1.0 - self.allocator.n_free / self.n_pages
+
+    # -- eager (per-request) writes ----------------------------------------
+
+    def write_prefill(self, pages: list[int], cache, lane: int | None = None):
+        """Scatter a whole-prompt prefill cache (leaves (layers, 1, s, *t))
+        into ``pages``; state leaves go to ``lane``'s row when given."""
+        ps = self.page_size
+        pages_arr = jnp.asarray(pages, jnp.int32)
+
+        def leaf(path, pool, pc):
+            if _is_seq(path):
+                reps, s = pc.shape[0], pc.shape[2]
+                cap = len(pages) * ps
+                pad = [(0, 0)] * pc.ndim
+                pad[2] = (0, cap - s)
+                paged = jnp.pad(pc, pad).reshape(
+                    (reps, len(pages), ps) + pc.shape[3:]
+                )
+                return pool.at[:, pages_arr].set(paged.astype(pool.dtype))
+            if lane is None:
+                return pool
+            return pool.at[:, lane].set(pc[:, 0].astype(pool.dtype))
+
+        self.pools = jax.tree_util.tree_map_with_path(leaf, self.pools, cache)
+
+    def write_state(self, lane: int, cache) -> None:
+        """Copy only the recurrent-state leaves of a held prefill cache into
+        ``lane``'s row (the lane was not known at prefill time)."""
+
+        def leaf(path, pool, pc):
+            if _is_seq(path):
+                return pool
+            return pool.at[:, lane].set(pc[:, 0].astype(pool.dtype))
+
+        self.pools = jax.tree_util.tree_map_with_path(leaf, self.pools, cache)
+
+    def has_state_leaves(self) -> bool:
+        found = []
+        jax.tree_util.tree_map_with_path(
+            lambda path, x: found.append(1) if not _is_seq(path) else None,
+            self.pools,
+        )
+        return bool(found)

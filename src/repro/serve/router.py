@@ -1,0 +1,86 @@
+"""Request routing across the SMC cube mesh (paper §VI-C, serving form).
+
+The paper's scalable paradigm is a *network* of SMCs each independently
+streaming its own requests with the host only coordinating.  The router is
+that host: one paged ``ServeEngine`` per cube slot along ``CUBE_AXIS``
+(coefficients replicated per cube, KV pages local to the cube), requests
+spread by
+
+* ``hash``         — uid-stable assignment, no coordination state at all;
+* ``least_loaded`` — queue-depth telemetry picks the emptiest cube (the
+  dataflow-aware choice under mixed-length traffic).
+
+On the 1-device CPU test host every cube's sharding degrades to replication
+via ``dist.sharding.cube_rules``; the routing logic and telemetry are
+identical to the multi-cube layout.
+"""
+from __future__ import annotations
+
+from repro.core.smc import CUBE_AXIS, make_cube_mesh
+
+from .engine import EngineConfig, Request, ServeEngine
+
+
+class CubeRouter:
+    """Hash / least-loaded routing of requests over per-cube engines."""
+
+    def __init__(self, model, params, ecfg: EngineConfig, n_cubes: int = 2,
+                 policy: str = "least_loaded", rules=None, mesh=None):
+        if policy not in ("hash", "least_loaded"):
+            raise ValueError(f"unknown router policy: {policy!r}")
+        if rules is None:
+            from repro.dist.sharding import cube_rules
+
+            mesh = mesh if mesh is not None else make_cube_mesh(n_cubes)
+            rules = cube_rules(mesh)
+        self.mesh = mesh
+        self.policy = policy
+        self.axis = CUBE_AXIS
+        self.engines = [
+            ServeEngine(model, params, ecfg, rules) for _ in range(n_cubes)
+        ]
+        self.routed = [0] * n_cubes
+
+    @property
+    def n_cubes(self) -> int:
+        return len(self.engines)
+
+    # -- routing --------------------------------------------------------------
+
+    def _pick(self, req: Request) -> int:
+        if self.policy == "hash":
+            return req.uid % self.n_cubes
+        loads = [e.load for e in self.engines]
+        return int(min(range(self.n_cubes), key=loads.__getitem__))
+
+    def submit(self, req: Request) -> int:
+        cube = self._pick(req)
+        self.engines[cube].submit(req)
+        self.routed[cube] += 1
+        return cube
+
+    # -- stepping -------------------------------------------------------------
+
+    def step(self, key=None) -> bool:
+        return any([e.step(key) for e in self.engines])
+
+    def run(self, key=None) -> list[Request]:
+        """Step every cube in lockstep (the cubes run concurrently in the
+        paper's network; here one host interleaves them) until drained."""
+        marks = [len(e.completed) for e in self.engines]
+        while any(e.load for e in self.engines):
+            self.step(key)
+        done: list[Request] = []
+        for e, m in zip(self.engines, marks):
+            done.extend(e.completed[m:])
+        return sorted(done, key=lambda r: r.uid)
+
+    # -- telemetry (per-cube queue depth — the least-loaded signal) -----------
+
+    def telemetry(self) -> dict:
+        per_cube = {
+            f"{self.axis}{i}": dict(e.telemetry(), routed=self.routed[i])
+            for i, e in enumerate(self.engines)
+        }
+        per_cube["total_routed"] = sum(self.routed)
+        return per_cube

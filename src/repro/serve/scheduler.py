@@ -1,0 +1,154 @@
+"""Request scheduler for the paged serving engine.
+
+Pure host-side policy — no jax.  The engine asks the scheduler three
+questions each step: which waiting requests to admit (admission control
+against the free page pool + the per-step token budget), how large a prefill
+chunk each in-flight prefill may run this step (prefill chunking keeps one
+long prompt from monopolizing a step), and which running request to evict
+when the page pool runs dry (preempt-longest-running: the request with the
+most generated tokens has consumed the most pool and is the cheapest to
+recompute per token of progress lost).
+
+Policies order the waiting queue only:
+
+* ``fcfs`` — arrival order;
+* ``spf``  — shortest-prompt-first (a short prompt frees its lane soonest,
+  the classic mean-latency win under mixed-length traffic).
+
+A preempted request re-enters at the *front* of the waiting queue whatever
+the policy — it already holds progress and starving it would livelock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class SchedulerConfig:
+    policy: str = "fcfs"            # fcfs | spf
+    max_step_tokens: int = 0        # 0 = unbounded (prefill + decode per step)
+    prefill_chunk: int = 0          # 0 = whole-prompt prefill
+    max_inflight_prefills: int = 2  # prefills admitted but not yet decoding
+
+
+@dataclass
+class RequestState:
+    """Scheduler-side shadow of one request."""
+
+    req: object                     # serve.engine.Request
+    resume_tokens: np.ndarray       # tokens to (re)prefill: prompt [+generated]
+    pages: list = field(default_factory=list)
+    lane: int = -1
+    prefilled: int = 0              # resume_tokens already written to pages
+    length: int = 0                 # kv entries valid in pages
+    pending_token: int = -1         # next decode input (last sampled token)
+    is_resume: bool = False         # re-prefill after preemption
+    preemptions: int = 0
+    last_logits: object = None      # final prefill logits (one vocab row)
+    state_cache: object = None      # held recurrent state until a lane frees
+
+    @property
+    def remaining_prefill(self) -> int:
+        return len(self.resume_tokens) - self.prefilled
+
+
+class Scheduler:
+    """Admission / chunking / preemption policy over four queues:
+    waiting → prefilling → ready → running(lane)."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        if cfg.policy not in ("fcfs", "spf"):
+            raise ValueError(f"unknown scheduler policy: {cfg.policy!r}")
+        self.cfg = cfg
+        self.waiting: list[RequestState] = []
+        self.prefilling: list[RequestState] = []
+        self.ready: list[RequestState] = []
+        self.running: dict[int, RequestState] = {}     # lane → state
+        self.n_preemptions = 0
+
+    # -- queue accounting ---------------------------------------------------
+
+    def add(self, req) -> None:
+        self.waiting.append(RequestState(
+            req=req, resume_tokens=np.asarray(req.prompt, np.int32)
+        ))
+
+    @property
+    def load(self) -> int:
+        return (len(self.waiting) + len(self.prefilling) + len(self.ready)
+                + len(self.running))
+
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    # -- admission ----------------------------------------------------------
+
+    def _pop_waiting(self) -> RequestState:
+        if self.cfg.policy == "spf":
+            i = int(np.argmin([len(s.resume_tokens) for s in self.waiting]))
+        else:
+            i = 0
+        return self.waiting.pop(i)
+
+    def admissions(self, cache, budget: int) -> list[RequestState]:
+        """Move waiting→prefilling while pages, budget, and the in-flight
+        bound allow; pages for the whole prompt (+1 decode slot) are
+        reserved up front so an admitted prefill can always finish."""
+        admitted = []
+        while (self.waiting and budget > 0
+               and len(self.prefilling) + len(self.ready)
+               < self.cfg.max_inflight_prefills):
+            nxt_i = (int(np.argmin([len(s.resume_tokens)
+                                    for s in self.waiting]))
+                     if self.cfg.policy == "spf" else 0)
+            need = len(self.waiting[nxt_i].resume_tokens) + 1
+            pages = cache.alloc(need)
+            if pages is None:
+                break
+            st = self.waiting.pop(nxt_i)
+            st.pages = pages
+            st.prefilled = 0
+            self.prefilling.append(st)
+            admitted.append(st)
+            budget -= min(self.chunk_for(st), budget)
+        return admitted
+
+    def chunk_for(self, st: RequestState) -> int:
+        if self.cfg.prefill_chunk <= 0:
+            return st.remaining_prefill
+        return min(self.cfg.prefill_chunk, st.remaining_prefill)
+
+    # -- preemption ---------------------------------------------------------
+
+    def pick_victim(self, exclude_lane: int = -1) -> Optional[RequestState]:
+        """Longest-running request (most generated tokens); prefer not to
+        evict ``exclude_lane`` (the lane asking for the page)."""
+        cands = [s for l, s in self.running.items() if l != exclude_lane]
+        if not cands:
+            cands = list(self.running.values())
+        if not cands:
+            return None
+        return max(cands, key=lambda s: len(s.req.out_tokens))
+
+    def preempt(self, st: RequestState, cache) -> None:
+        """Evict: free pages + lane, queue for recompute-resume at the front
+        (re-prefills prompt + generated-so-far; greedy decode then reproduces
+        the identical continuation)."""
+        cache.allocator.free(st.pages)
+        cache.clear_lane(st.lane)
+        del self.running[st.lane]
+        st.pages = []
+        st.lane = -1
+        st.resume_tokens = np.concatenate([
+            np.asarray(st.req.prompt, np.int32),
+            np.asarray(st.req.out_tokens[:-1], np.int32),
+        ])
+        st.prefilled = 0
+        st.length = 0
+        st.is_resume = True
+        st.preemptions += 1
+        self.n_preemptions += 1
+        self.waiting.insert(0, st)

@@ -1,0 +1,462 @@
+"""Serve v2: paged-KV cache, scheduler, router, and engine equivalence.
+
+The load-bearing invariants:
+
+* page-table gather reproduces the dense per-slot cache bit-exactly, and the
+  decode logits over the gathered view equal the dense-cache logits
+  bit-exactly (old engine vs new engine, same seed);
+* the paged engine's greedy tokens equal the dense slot engine's on the same
+  workload, and a ragged batch equals sequential single-request serving;
+* alloc/free round-trips leave the free list full; preemption + recompute-
+  resume reproduces identical tokens; early-EOS requests release their slot.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.models.common import AxisRules, DEFAULT_RULES
+from repro.serve.dense_engine import DenseSlotEngine
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.paged_cache import PageAllocator, PagedKVCache, gather_views
+from repro.serve.router import CubeRouter
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+
+RULES = AxisRules(DEFAULT_RULES)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, n=5, plen=6, max_new=4, ragged=False, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            uid=i,
+            prompt=rng.integers(
+                0, cfg.vocab_size, size=(plen + (3 * i if ragged else 0),)
+            ).astype(np.int32),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def _serve(engine_cls, model, params, ecfg, reqs):
+    eng = engine_cls(model, params, ecfg, RULES)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return {r.uid: r.out_tokens for r in reqs}, eng
+
+
+# ---------------------------------------------------------------------------
+# Free-list invariants
+# ---------------------------------------------------------------------------
+
+
+def test_free_list_roundtrip():
+    alloc = PageAllocator(16)
+    a = alloc.alloc(5)
+    b = alloc.alloc(11)
+    assert alloc.n_free == 0
+    assert sorted(a + b) == list(range(16))          # every page handed once
+    assert alloc.alloc(1) is None                    # dry pool: no side effect
+    assert alloc.n_free == 0
+    alloc.free(b)
+    alloc.free(a)
+    assert alloc.n_free == 16                        # round trip → full again
+    assert sorted(alloc.alloc(16)) == list(range(16))
+
+
+def test_absorb_decode_inactive_lane_writes_nothing():
+    """Regression: the inactive-lane scatter sentinel must be out of bounds
+    ABOVE the pool (a -1 index is normalized to n_pages-1 before mode='drop'
+    applies and would corrupt the last physical page)."""
+    from repro.serve.paged_cache import absorb_decode
+
+    pool = {"k": jnp.zeros((1, 4, 2, 1, 1), jnp.float32)}   # 4 pages of 2
+    view = {"k": jnp.full((1, 2, 4, 1, 1), -5.0, jnp.float32)}
+    bt = jnp.asarray([[0, 1], [-1, -1]], jnp.int32)
+    out = absorb_decode(
+        pool, view, bt, positions=jnp.asarray([1, 0], jnp.int32),
+        active=jnp.asarray([True, False]), page_size=2,
+    )
+    got = np.array(out["k"])
+    assert got[0, 0, 1, 0, 0] == -5.0          # active lane 0 wrote page 0
+    got[0, 0, 1, 0, 0] = 0.0
+    assert np.all(got == 0.0)                  # inactive lane wrote nowhere
+
+
+def test_engine_rejects_oversize_prompt(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params,
+                      EngineConfig(batch_slots=1, max_len=32), RULES)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.zeros(40, np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Page-table gather == dense cache, bit-exactly (old vs new engine layout)
+# ---------------------------------------------------------------------------
+
+
+def test_gather_matches_dense_cache_and_logits_bitexact(served):
+    cfg, model, params = served
+    model = build_model(dataclasses.replace(cfg, decode_unroll_layers=False))
+    max_len, ps = 32, 8
+    prompts = [np.asarray([5, 9, 2, 7, 11], np.int32),
+               np.asarray([3, 1, 4, 1, 5], np.int32)]
+
+    # dense per-slot cache, packed exactly as the dense slot engine packs it
+    dense = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), model.cache_specs(2, max_len)
+    )
+    paged = PagedKVCache(model, lanes=2, n_pages=8, page_size=ps,
+                         max_len=max_len)
+    for slot, prompt in enumerate(prompts):
+        _, pc = model.prefill(params, jnp.asarray(prompt)[None], RULES)
+
+        def pack(big, small, _slot=slot):
+            if big.ndim >= 3 and small.shape[2:3] != big.shape[2:3]:
+                pad = [(0, 0)] * small.ndim
+                pad[2] = (0, big.shape[2] - small.shape[2])
+                small = jnp.pad(small, pad)
+            return big.at[:, _slot: _slot + 1].set(small.astype(big.dtype))
+
+        dense = jax.tree.map(pack, dense, pc)
+        pages = paged.alloc(len(prompt) + 1)
+        paged.write_prefill(pages, pc, lane=slot)
+        paged.assign_lane(slot, pages)
+
+    view = gather_views(paged.pools, jnp.asarray(paged.block_tables))
+    for dv, pv in zip(jax.tree.leaves(dense), jax.tree.leaves(view)):
+        assert dv.shape == pv.shape
+        assert np.array_equal(np.asarray(dv), np.asarray(pv))
+
+    # decode over the gathered view == decode over the dense cache, bit-exact
+    toks = jnp.asarray([[5], [3]], jnp.int32)
+    ld, _ = model.decode_step(params, dense, toks, jnp.asarray(5, jnp.int32),
+                              RULES)
+    lp, _ = model.decode_step(params, view, toks, jnp.asarray(5, jnp.int32),
+                              RULES)
+    assert np.array_equal(np.asarray(ld), np.asarray(lp))
+    # and the per-lane-position decode agrees bit-exactly with the scalar one
+    lv, _ = model.decode_step(params, view, toks,
+                              jnp.asarray([5, 5], jnp.int32), RULES)
+    assert np.array_equal(np.asarray(ld), np.asarray(lv))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level greedy equivalence (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_engine_matches_dense_engine_greedy(served):
+    """Same-length prompts (the dense engine's shared-max-position stepping
+    is only exact there), more requests than slots → queueing + refill."""
+    cfg, model, params = served
+    ecfg = EngineConfig(batch_slots=2, max_len=64)
+    want, _ = _serve(DenseSlotEngine, model, params, ecfg, _reqs(cfg))
+    got, eng = _serve(ServeEngine, model, params, ecfg, _reqs(cfg))
+    assert want == got
+    assert eng.cache.allocator.n_free == eng.cache.n_pages   # all pages back
+
+
+def test_ragged_batch_matches_sequential(served):
+    """Per-lane positions: a ragged batch reproduces single-request serving
+    (which the dense engine's shared-position step cannot guarantee)."""
+    cfg, model, params = served
+    seq = ServeEngine(model, params,
+                      EngineConfig(batch_slots=1, max_len=64), RULES)
+    base = {}
+    for r in _reqs(cfg, n=4, ragged=True):
+        seq.submit(r)
+        seq.run()
+        base[r.uid] = r.out_tokens
+    got, _ = _serve(ServeEngine, model, params,
+                    EngineConfig(batch_slots=3, max_len=64),
+                    _reqs(cfg, n=4, ragged=True))
+    assert base == got
+
+
+def test_chunked_prefill_matches_whole_prompt(served):
+    cfg, model, params = served
+    whole, _ = _serve(ServeEngine, model, params,
+                      EngineConfig(batch_slots=2, max_len=64),
+                      _reqs(cfg, n=3, plen=11))
+    chunked, eng = _serve(ServeEngine, model, params,
+                          EngineConfig(batch_slots=2, max_len=64,
+                                       prefill_chunk=4, max_step_tokens=12),
+                          _reqs(cfg, n=3, plen=11))
+    assert whole == chunked
+    assert eng.stats["prefill_tokens"] == 3 * 11
+
+
+def test_preemption_then_resume_reproduces_tokens(served):
+    cfg, model, params = served
+    reqs = lambda: _reqs(cfg, n=3, plen=7, max_new=10, seed=7)  # noqa: E731
+    base, _ = _serve(ServeEngine, model, params,
+                     EngineConfig(batch_slots=1, max_len=32, page_size=4),
+                     reqs())
+    # 3 lanes on a 7-page pool: each request reserves 2 pages and grows to 5
+    # → the pool runs dry mid-decode and must preempt
+    got, eng = _serve(ServeEngine, model, params,
+                      EngineConfig(batch_slots=3, max_len=32, page_size=4,
+                                   n_pages=7),
+                      reqs())
+    assert eng.sched.n_preemptions > 0
+    assert base == got
+    assert eng.cache.allocator.n_free == eng.cache.n_pages
+
+
+# ---------------------------------------------------------------------------
+# EOS handling (regression: early EOS must refill the slot)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine_cls", [ServeEngine, DenseSlotEngine])
+def test_early_eos_finishes_at_prefill_and_frees_slot(served, engine_cls):
+    cfg, model, params = served
+    prompt = np.asarray([5, 9, 2, 7], np.int32)
+    logits, _ = model.forward(params, jnp.asarray(prompt)[None], RULES)
+    eos = int(jnp.argmax(logits[0, -1]))     # the prefill token IS the eos
+    ecfg = EngineConfig(batch_slots=1, max_len=32, eos_id=eos)
+    eng = engine_cls(model, params, ecfg, RULES)
+    first = Request(uid=0, prompt=prompt, max_new_tokens=8)
+    second = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32),
+                     max_new_tokens=3)
+    eng.submit(first)
+    eng.submit(second)
+    eng.run()
+    assert first.done and first.out_tokens == [eos]   # stopped at prefill
+    assert second.done and len(second.out_tokens) >= 1
+    if engine_cls is ServeEngine:
+        assert eng.cache.allocator.n_free == eng.cache.n_pages
+
+
+def test_eos_mid_decode(served):
+    cfg, model, params = served
+    req = Request(uid=0, prompt=np.asarray([5, 9, 2, 7], np.int32),
+                  max_new_tokens=16)
+    eng = ServeEngine(model, params,
+                      EngineConfig(batch_slots=1, max_len=64), RULES)
+    eng.submit(req)
+    eng.run()
+    full = list(req.out_tokens)
+    assert len(full) == 16
+    eos = full[2]
+    req2 = Request(uid=1, prompt=np.asarray([5, 9, 2, 7], np.int32),
+                   max_new_tokens=16)
+    eng2 = ServeEngine(model, params,
+                       EngineConfig(batch_slots=1, max_len=64, eos_id=eos),
+                       RULES)
+    eng2.submit(req2)
+    eng2.run()
+    assert req2.out_tokens == full[: full.index(eos) + 1]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy units (no jax)
+# ---------------------------------------------------------------------------
+
+
+class _StubCache:
+    def __init__(self, n_pages, page_size=4):
+        self.allocator = PageAllocator(n_pages)
+        self.page_size = page_size
+
+    def alloc(self, n_tokens):
+        return self.allocator.alloc(-(-n_tokens // self.page_size))
+
+    def clear_lane(self, lane):
+        pass
+
+
+def _stub_req(uid, plen):
+    return Request(uid=uid, prompt=np.zeros(plen, np.int32))
+
+
+def test_scheduler_fcfs_vs_spf_ordering():
+    for policy, want in (("fcfs", [0, 1]), ("spf", [2, 3])):
+        s = Scheduler(SchedulerConfig(policy=policy))
+        for uid, plen in ((0, 12), (1, 9), (2, 3), (3, 5)):
+            s.add(_stub_req(uid, plen))
+        admitted = s.admissions(_StubCache(n_pages=8), budget=1 << 30)
+        assert [st.req.uid for st in admitted] == want, policy
+
+
+def test_scheduler_admission_respects_pool_and_inflight():
+    s = Scheduler(SchedulerConfig(max_inflight_prefills=1))
+    for uid in range(3):
+        s.add(_stub_req(uid, 8))
+    cache = _StubCache(n_pages=100)
+    assert len(s.admissions(cache, budget=1 << 30)) == 1   # in-flight bound
+    s.prefilling.clear()
+    assert len(s.admissions(_StubCache(n_pages=1), budget=1 << 30)) == 0
+    assert len(s.waiting) == 2                             # nothing consumed
+
+
+def test_scheduler_chunking_and_victim():
+    s = Scheduler(SchedulerConfig(prefill_chunk=5))
+    s.add(_stub_req(0, 12))
+    st = s.admissions(_StubCache(64), budget=1 << 30)[0]
+    assert s.chunk_for(st) == 5
+    st.prefilled = 10
+    assert s.chunk_for(st) == 2
+    # victim = most generated tokens, excluding the asking lane if possible
+    a, b = _stub_req(1, 4), _stub_req(2, 4)
+    a.out_tokens = [1, 2, 3]
+    b.out_tokens = [1]
+    from repro.serve.scheduler import RequestState
+    s.running = {
+        0: RequestState(req=a, resume_tokens=np.zeros(4, np.int32), lane=0),
+        1: RequestState(req=b, resume_tokens=np.zeros(4, np.int32), lane=1),
+    }
+    assert s.pick_victim().req.uid == 1
+    assert s.pick_victim(exclude_lane=0).req.uid == 2
+
+
+def test_scheduler_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        Scheduler(SchedulerConfig(policy="lifo"))
+
+
+# ---------------------------------------------------------------------------
+# Cube router
+# ---------------------------------------------------------------------------
+
+
+def test_router_hash_and_least_loaded(served):
+    cfg, model, params = served
+    ecfg = EngineConfig(batch_slots=1, max_len=32)
+    rt = CubeRouter(model, params, ecfg, n_cubes=2, policy="hash")
+    assert [rt.submit(r) for r in _reqs(cfg, n=4, max_new=2)] == [0, 1, 0, 1]
+    done = rt.run()
+    assert [r.uid for r in done] == [0, 1, 2, 3]
+    assert all(len(r.out_tokens) == 2 for r in done)
+    tel = rt.telemetry()
+    assert tel["total_routed"] == 4
+    assert tel["pod0"]["routed"] == 2 and tel["pod1"]["routed"] == 2
+
+    rt2 = CubeRouter(model, params, ecfg, n_cubes=2, policy="least_loaded")
+    cubes = [rt2.submit(r) for r in _reqs(cfg, n=4, max_new=2)]
+    assert sorted(cubes) == [0, 0, 1, 1]     # queue-depth balanced
+    with pytest.raises(ValueError):
+        CubeRouter(model, params, ecfg, n_cubes=1, policy="round_robin")
+
+
+# ---------------------------------------------------------------------------
+# Paged read kernel vs oracle vs model decode attention
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kernels_match_ref_and_decode_attention():
+    from repro.kernels import ops, ref
+    from repro.models.attention import decode_attention
+
+    rng = np.random.default_rng(0)
+    n, ps, g, d, b, p, h = 12, 16, 2, 32, 3, 4, 4
+    kpool = jnp.asarray(rng.normal(size=(n, ps, g, d)), jnp.float32)
+    vpool = jnp.asarray(rng.normal(size=(n, ps, g, d)), jnp.float32)
+    bt = jnp.asarray([[0, 3, -1, -1], [5, 2, 7, -1], [1, -1, -1, -1]],
+                     jnp.int32)
+    lengths = jnp.asarray([20, 45, 9], jnp.int32)
+
+    got = ops.paged_gather(kpool, bt)
+    want = ref.paged_gather(kpool, bt)
+    assert np.array_equal(np.asarray(got), np.asarray(want))   # pure copy
+
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    got = ops.paged_attention(q, kpool, vpool, bt, lengths)
+    want = ref.paged_decode_attention(
+        q.reshape(b, g, h // g, d), kpool.transpose(2, 0, 1, 3),
+        vpool.transpose(2, 0, 1, 3), bt, lengths,
+    ).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    kd = ref.paged_gather(kpool, bt).reshape(b, p * ps, g, d)
+    vd = ref.paged_gather(vpool, bt).reshape(b, p * ps, g, d)
+    da = decode_attention(q[:, None].reshape(b, 1, h, d), kd, vd,
+                          position=lengths - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(da[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_gather_impl_serves_identically(served):
+    cfg, model, params = served
+    want, _ = _serve(ServeEngine, model, params,
+                     EngineConfig(batch_slots=2, max_len=32),
+                     _reqs(cfg, n=2, max_new=3))
+    got, _ = _serve(ServeEngine, model, params,
+                    EngineConfig(batch_slots=2, max_len=32,
+                                 gather_impl="pallas"),
+                    _reqs(cfg, n=2, max_new=3))
+    assert want == got
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules for page pools
+# ---------------------------------------------------------------------------
+
+
+def test_paged_cache_axes_resolve_on_host_mesh(served):
+    from repro.dist.sharding import cube_rules, paged_cache_axes, tree_shardings
+
+    cfg, model, params = served
+    model2 = build_model(dataclasses.replace(cfg, decode_unroll_layers=False))
+    specs = model2.cache_page_specs(lanes=2, n_pages=8, page_size=8)
+    axes = paged_cache_axes(cfg, specs)
+    for s, ax in zip(jax.tree.leaves(specs), jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))):
+        assert len(ax) == len(s.shape)
+    mesh = jax.make_mesh((1,), ("pod",))
+    rules = cube_rules(mesh)
+    assert rules.rules["pages"] is None
+    shardings = tree_shardings(mesh, specs, axes, rules)
+    for sh in jax.tree.leaves(shardings):
+        assert sh.mesh == mesh                 # resolved (replicated on 1 dev)
+
+
+def test_model_cache_page_specs_shapes(served):
+    cfg, model, params = served
+    model2 = build_model(dataclasses.replace(cfg, decode_unroll_layers=False))
+    specs = model2.cache_page_specs(lanes=3, n_pages=10, page_size=8)
+    leaves = jax.tree.leaves(specs)
+    # qwen reduced: 2 layers of GQA k/v — every leaf is a pool
+    assert all(l.shape[1:3] == (10, 8) for l in leaves)
+    base = model2.cache_specs(3, 8)
+    assert jax.tree_util.tree_structure(specs) == jax.tree_util.tree_structure(base)
+
+
+# ---------------------------------------------------------------------------
+# Serving bench smoke (tier-1: the bench may not rot)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_bench_smoke(tmp_path):
+    import sys
+
+    sys.path.insert(0, ".")
+    try:
+        from benchmarks import serve_bench
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "serve_bench.json"
+    results = serve_bench.main(["--smoke", "--out", str(out)])
+    import json
+
+    report = json.loads(out.read_text())
+    assert {"dense", "paged", "speedup", "workload"} <= report.keys()
+    assert report["paged"]["tokens"] == report["dense"]["tokens"] > 0
+    assert report["workload"]["smoke"] is True
+    assert results["speedup"] == report["speedup"]
