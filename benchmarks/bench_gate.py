@@ -1,0 +1,147 @@
+"""CI perf-regression gate over the committed BENCH_*.json baselines.
+
+``--update`` runs the smoke benches and (re)writes the baselines
+(``BENCH_serve.json`` / ``BENCH_kernels.json`` at the repo root — the bench
+trajectory lives in git); ``--check`` re-runs them and fails (exit 1) when a
+gated metric regresses more than ``TOLERANCE`` below its baseline.
+
+Gated metrics are *ratios measured on one machine* (paged-vs-dense serving
+speedup, kernel-vs-oracle timing ratios), so they transfer across runners
+far better than absolute wall times; absolute ``*_us`` / latency numbers are
+recorded in the JSON for trend reading but never gated.  Each check takes
+the best of ``--repeats`` runs to shave scheduler noise.
+
+Run:  PYTHONPATH=src python benchmarks/bench_gate.py --check
+      PYTHONPATH=src python benchmarks/bench_gate.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import sys
+
+# fail when current < TOLERANCE x baseline (>20% regression).  The gated
+# metrics are same-machine ratios, which transfer across runners far better
+# than absolute times but not perfectly — when the CI runner fleet or the
+# pinned jax changes, refresh the baselines (--update, ideally from a CI
+# run) rather than loosening the gate; BENCH_GATE_TOLERANCE exists for a
+# deliberate temporary override, not as a knob to silence a regression.
+TOLERANCE = float(os.environ.get("BENCH_GATE_TOLERANCE", "0.8"))
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SERVE_BASELINE = ROOT / "BENCH_serve.json"
+KERNEL_BASELINE = ROOT / "BENCH_kernels.json"
+
+# higher-is-better ratio metrics extracted from each bench's JSON
+GATED_SERVE = ("speedup", "paged_vs_gather_speedup")
+GATED_KERNELS = ("attn.flash_xla.oracle_ratio", "attn.paged_decode.oracle_ratio")
+
+
+def run_serve() -> dict:
+    from benchmarks import serve_bench
+
+    r = serve_bench.bench_pair(decode_path="both", size="gate")
+    paged = r["decode_paths"]["paged"]
+    return {
+        "speedup": r["speedup"],
+        "paged_vs_gather_speedup": r["paged_vs_gather_speedup"],
+        "paths_token_identical": r["paths_token_identical"],
+        "dense_tok_s": r["dense"]["tok_s"],
+        "paged_tok_s": paged["tok_s"],
+        "paged_step_p50_ms": paged["step_latency_ms"]["p50"],
+        "paged_peak_live_bytes": paged["decode_memory"]["peak_live_bytes"],
+        "gathered_view_bytes": paged["gathered_view_bytes"],
+    }
+
+
+def run_kernels() -> dict:
+    from benchmarks import kernel_bench
+
+    return kernel_bench.bench_json()
+
+
+def _median_of(fn, repeats: int) -> dict:
+    """Per-key median over ``repeats`` runs — a single slow or fast outlier
+    run on a noisy shared runner must not swing a gated ratio."""
+    import statistics
+
+    runs = [fn() for _ in range(repeats)]
+    out = dict(runs[0])
+    for k, v in out.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[k] = statistics.median(r[k] for r in runs)
+    return out
+
+
+def check(current: dict, baseline: dict, gated, label: str) -> list[str]:
+    failures = []
+    for key in gated:
+        base = baseline.get(key)
+        cur = current.get(key)
+        if base is None or cur is None:
+            failures.append(f"{label}: metric {key!r} missing "
+                            f"(baseline={base}, current={cur})")
+            continue
+        floor = TOLERANCE * base
+        status = "ok" if cur >= floor else "REGRESSED"
+        print(f"  {label}.{key}: baseline={base:.3f} current={cur:.3f} "
+              f"floor={floor:.3f} [{status}]")
+        if cur < floor:
+            failures.append(
+                f"{label}: {key} regressed >20%: {cur:.3f} < "
+                f"{floor:.3f} (baseline {base:.3f})"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true",
+                      help="fail when a gated ratio regresses >20%")
+    mode.add_argument("--update", action="store_true",
+                      help="(re)write the committed baselines")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per bench; the gate takes the median")
+    ap.add_argument("--out-serve", default="serve_gate.json",
+                    help="where --check writes the current serve metrics")
+    ap.add_argument("--out-kernels", default="kernels_gate.json")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(ROOT))
+    serve = _median_of(run_serve, args.repeats)
+    kernels = _median_of(run_kernels, args.repeats)
+    import jax
+
+    env = {"jax": jax.__version__, "python": platform.python_version(),
+           "machine": platform.machine()}
+    serve["env"], kernels["env"] = env, env
+
+    if args.update:
+        SERVE_BASELINE.write_text(json.dumps(serve, indent=2) + "\n")
+        KERNEL_BASELINE.write_text(json.dumps(kernels, indent=2) + "\n")
+        print(f"baselines written: {SERVE_BASELINE.name} {KERNEL_BASELINE.name}")
+        return 0
+
+    pathlib.Path(args.out_serve).write_text(json.dumps(serve, indent=2))
+    pathlib.Path(args.out_kernels).write_text(json.dumps(kernels, indent=2))
+    failures = []
+    if not serve.get("paths_token_identical"):
+        failures.append("serve: gather/paged token identity broken")
+    failures += check(serve, json.loads(SERVE_BASELINE.read_text()),
+                      GATED_SERVE, "serve")
+    failures += check(kernels, json.loads(KERNEL_BASELINE.read_text()),
+                      GATED_KERNELS, "kernels")
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

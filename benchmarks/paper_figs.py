@@ -16,7 +16,6 @@ experimental artifacts from the reimplemented SMC machine model:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 
 from repro.core import zoo

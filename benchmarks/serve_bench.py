@@ -1,12 +1,25 @@
-"""Serving throughput bench: dense slot engine vs paged engine.
+"""Serving throughput bench: dense slot engine vs paged engine, and the
+paged engine's gather-vs-paged decode paths.
 
 Mixed-length Poisson traffic (8-128 token prompts, geometric interarrivals
-on the step clock) is driven through both engines at an EQUAL memory budget:
+on the step clock) is driven through the engines at an EQUAL memory budget:
 the dense engine spends ``slots x max_len`` of cache; the paged engine gets
 exactly the same token budget as a page pool and spends it per actual
-request length, which buys it more concurrent decode lanes.  Reports
-tokens/s and page occupancy to stdout (CSV rows for ``benchmarks/run.py``)
-and a JSON report.
+request length, which buys it more concurrent decode lanes.
+
+The ``--decode-path`` axis compares the paged engine's two decode paths on
+identical workloads:
+
+* ``gather`` — materialize the dense (lanes, capacity, ...) view tree, run
+  ``decode_step``, scatter the written column back (the fallback oracle);
+* ``paged``  — hand block tables straight to ``decode_step_paged`` (the
+  dense view is never built).
+
+Per-path the JSON report carries per-step decode latency percentiles and
+the compiled decode step's peak live bytes (``memory_analysis``), plus the
+dense gathered-view bytes the paged path never materializes.  ``both`` runs
+both and asserts token identity — a silent numeric break cannot pass the
+CI bench gate.
 
 Run:   PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
 Smoke: PYTHONPATH=src python benchmarks/serve_bench.py --smoke   (tier-1 CI)
@@ -37,12 +50,13 @@ def make_workload(n, lengths, max_new, mean_interarrival, seed=0):
 
 def drive(engine, workload):
     """Submit requests on the engine's step clock (arrival = step index);
-    returns (tokens, wall_seconds, steps)."""
+    returns (tokens, wall_seconds, steps, per_step_seconds, uid→tokens)."""
     from repro.serve.engine import Request
 
     pending = sorted(workload, key=lambda r: r["arrival"])
     live = []
     step = 0
+    step_s = []
     t0 = time.perf_counter()
     while pending or getattr(engine, "load", 0) or any(
         r is not None for r in getattr(engine, "slot_req", [])
@@ -53,15 +67,81 @@ def drive(engine, workload):
                           max_new_tokens=w["max_new_tokens"])
             live.append(req)
             engine.submit(req)
+        ts = time.perf_counter()
         engine.step()
+        step_s.append(time.perf_counter() - ts)
         step += 1
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out_tokens) for r in live)
     assert all(r.done for r in live), "bench drained with unfinished requests"
-    return tokens, dt, step
+    out = {r.uid: list(r.out_tokens) for r in live}
+    return tokens, dt, step, step_s, out
 
 
-def bench_pair(smoke: bool = False, seed: int = 0) -> dict:
+def _latency_ms(step_s) -> dict:
+    a = np.asarray(step_s) * 1e3
+    return {
+        "mean": float(a.mean()),
+        "p50": float(np.percentile(a, 50)),
+        "p95": float(np.percentile(a, 95)),
+        "max": float(a.max()),
+    }
+
+
+def gathered_view_bytes(engine) -> int:
+    """Bytes of the dense (lanes, capacity, ...) seq-cache view tree the
+    gather path materializes every decode step — the allocation the paged
+    path never makes."""
+    import jax
+
+    from repro.models.common import SEQ_CACHE_KEYS, cache_leaf_key
+
+    specs = engine.model.cache_specs(engine.ecfg.batch_slots,
+                                     engine.cache.capacity)
+    total = []
+
+    def leaf(path, s):
+        if cache_leaf_key(path) in SEQ_CACHE_KEYS:
+            total.append(int(np.prod(s.shape)) * s.dtype.itemsize)
+
+    jax.tree_util.tree_map_with_path(leaf, specs)
+    return sum(total)
+
+
+def decode_memory(engine) -> dict:
+    """Compiled decode-step memory footprint (``memory_analysis``): the
+    peak live bytes include the transient dense views on the gather path
+    and only the page pools on the paged path."""
+    import jax.numpy as jnp
+
+    b = engine.ecfg.batch_slots
+    args = (
+        engine.params, engine.cache.pools,
+        jnp.asarray(engine.cache.block_tables),
+        jnp.zeros((b, 1), jnp.int32), jnp.zeros((b,), jnp.int32),
+        jnp.zeros((b,), bool),
+    )
+    try:
+        ma = engine._decode.lower(*args).compile().memory_analysis()
+        out = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "available": True,
+        }
+        out["peak_live_bytes"] = (
+            out["argument_bytes"] + out["output_bytes"] + out["temp_bytes"]
+            - out["alias_bytes"]
+        )
+        return out
+    except Exception:       # backend without memory_analysis
+        return {"argument_bytes": 0, "output_bytes": 0, "temp_bytes": 0,
+                "alias_bytes": 0, "peak_live_bytes": 0, "available": False}
+
+
+def bench_pair(smoke: bool = False, seed: int = 0,
+               decode_path: str = "both", size: str | None = None) -> dict:
     import jax
 
     from repro.configs import get_arch
@@ -75,9 +155,16 @@ def bench_pair(smoke: bool = False, seed: int = 0) -> dict:
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 
-    if smoke:
+    size = size or ("smoke" if smoke else "full")
+    if size == "smoke":
         lengths, max_new, n, max_len = (8, 16), 6, 4, 64
         dense_slots, paged_lanes, page_size = 2, 3, 16
+    elif size == "gate":
+        # the CI bench-gate workload: enough decode steps that dispatch /
+        # scheduler noise averages out of the gated throughput ratios, but
+        # still minutes-not-hours on a shared runner
+        lengths, max_new, n, max_len = (8, 16, 32), 10, 10, 96
+        dense_slots, paged_lanes, page_size = 2, 5, 16
     else:
         lengths, max_new, n, max_len = (8, 16, 32, 64, 128), 16, 24, 160
         dense_slots, paged_lanes, page_size = 4, 8, 16
@@ -95,34 +182,61 @@ def bench_pair(smoke: bool = False, seed: int = 0) -> dict:
         EngineConfig(batch_slots=dense_slots, max_len=max_len), rules,
     )
     warmup(dense)
-    toks, dt, steps = drive(dense, make_workload(
+    toks, dt, steps, step_s, _ = drive(dense, make_workload(
         n, lengths, max_new, mean_interarrival=2, seed=seed))
     results["dense"] = {
         "tokens": toks, "seconds": dt, "tok_s": toks / dt, "steps": steps,
+        "step_latency_ms": _latency_ms(step_s),
         "slots": dense_slots, "cache_budget_tokens": budget_tokens,
     }
 
-    paged = ServeEngine(
-        model, params,
-        EngineConfig(batch_slots=paged_lanes, max_len=max_len,
-                     page_size=page_size, n_pages=n_pages), rules,
+    paths = ("gather", "paged") if decode_path == "both" else (decode_path,)
+    results["decode_paths"] = {}
+    path_tokens = {}
+    for path in paths:
+        eng = ServeEngine(
+            model, params,
+            EngineConfig(batch_slots=paged_lanes, max_len=max_len,
+                         page_size=page_size, n_pages=n_pages,
+                         decode_path=path), rules,
+        )
+        warmup(eng)
+        toks, dt, steps, step_s, by_uid = drive(eng, make_workload(
+            n, lengths, max_new, mean_interarrival=2, seed=seed))
+        tel = eng.telemetry()
+        path_tokens[path] = by_uid
+        results["decode_paths"][path] = {
+            "tokens": toks, "seconds": dt, "tok_s": toks / dt, "steps": steps,
+            "step_latency_ms": _latency_ms(step_s),
+            "lanes": paged_lanes, "page_size": page_size, "n_pages": n_pages,
+            "cache_budget_tokens": n_pages * page_size,
+            "page_occupancy_mean": tel["occupancy_mean"],
+            "page_occupancy_max": tel["occupancy_max"],
+            "preemptions": tel["preemptions"],
+            "gathered_view_bytes": gathered_view_bytes(eng),
+            "decode_memory": decode_memory(eng),
+        }
+    if decode_path == "both":
+        # the acceptance bar: the zero-materialization path must reproduce
+        # the gather oracle token-for-token (greedy) — asserted here so the
+        # CI smoke/bench gate cannot pass over a silent numeric break
+        assert path_tokens["gather"] == path_tokens["paged"], (
+            "gather/paged decode paths produced different tokens"
+        )
+        results["paths_token_identical"] = True
+        g = results["decode_paths"]["gather"]
+        p = results["decode_paths"]["paged"]
+        results["paged_vs_gather_speedup"] = g["seconds"] / p["seconds"]
+
+    # legacy top-level "paged" block (benchmarks/run.py + the bench gate key
+    # on it): the zero-materialization path when it ran, else the one path
+    results["paged"] = results["decode_paths"].get(
+        "paged", next(iter(results["decode_paths"].values()))
     )
-    warmup(paged)
-    toks, dt, steps = drive(paged, make_workload(
-        n, lengths, max_new, mean_interarrival=2, seed=seed))
-    tel = paged.telemetry()
-    results["paged"] = {
-        "tokens": toks, "seconds": dt, "tok_s": toks / dt, "steps": steps,
-        "lanes": paged_lanes, "page_size": page_size, "n_pages": n_pages,
-        "cache_budget_tokens": n_pages * page_size,
-        "page_occupancy_mean": tel["occupancy_mean"],
-        "page_occupancy_max": tel["occupancy_max"],
-        "preemptions": tel["preemptions"],
-    }
     results["speedup"] = results["paged"]["tok_s"] / results["dense"]["tok_s"]
     results["workload"] = {
         "requests": n, "prompt_lengths": list(lengths), "max_new": max_new,
-        "smoke": smoke,
+        "smoke": size == "smoke", "size": size, "decode_path": decode_path,
     }
     return results
 
@@ -130,12 +244,18 @@ def bench_pair(smoke: bool = False, seed: int = 0) -> dict:
 def bench():
     """CSV rows for benchmarks/run.py (small non-smoke run)."""
     r = bench_pair(smoke=True)
+    paged = r["decode_paths"]["paged"]
     return [
         ("serve.dense.tok_s", f"{r['dense']['tok_s']:.2f}", "tokens/s"),
-        ("serve.paged.tok_s", f"{r['paged']['tok_s']:.2f}", "tokens/s"),
+        ("serve.paged.tok_s", f"{paged['tok_s']:.2f}", "tokens/s"),
         ("serve.paged.speedup", f"{r['speedup']:.3f}", "x vs dense"),
+        ("serve.paged.step_p50_ms",
+         f"{paged['step_latency_ms']['p50']:.2f}", "per-step decode"),
+        ("serve.paged.peak_live_MB",
+         f"{paged['decode_memory']['peak_live_bytes']/1e6:.2f}",
+         "compiled decode step"),
         ("serve.paged.occupancy_max",
-         f"{r['paged']['page_occupancy_max']:.3f}", "pool fraction"),
+         f"{paged['page_occupancy_max']:.3f}", "pool fraction"),
     ]
 
 
@@ -143,22 +263,34 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="few-step CI run (still writes the JSON report)")
+    ap.add_argument("--decode-path", choices=["gather", "paged", "both"],
+                    default="both",
+                    help="which paged-engine decode path(s) to drive; "
+                         "'both' also asserts token identity")
     ap.add_argument("--out", default="serve_bench.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    results = bench_pair(smoke=args.smoke, seed=args.seed)
+    results = bench_pair(smoke=args.smoke, seed=args.seed,
+                         decode_path=args.decode_path)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, default=float)
-    d, p = results["dense"], results["paged"]
+    d = results["dense"]
     print(f"dense : {d['tok_s']:8.2f} tok/s  ({d['slots']} slots x "
           f"{d['cache_budget_tokens'] // d['slots']} ctx = "
           f"{d['cache_budget_tokens']} cache tokens)")
-    print(f"paged : {p['tok_s']:8.2f} tok/s  ({p['lanes']} lanes, "
-          f"{p['n_pages']} x {p['page_size']} pages = "
-          f"{p['cache_budget_tokens']} cache tokens, "
-          f"occupancy max {p['page_occupancy_max']:.2f}, "
-          f"{p['preemptions']} preemptions)")
+    for path, p in results["decode_paths"].items():
+        mem = p["decode_memory"]
+        print(f"{path:6s}: {p['tok_s']:8.2f} tok/s  ({p['lanes']} lanes, "
+              f"{p['n_pages']} x {p['page_size']} pages, "
+              f"step p50 {p['step_latency_ms']['p50']:.2f} ms, "
+              f"peak live {mem['peak_live_bytes']/1e6:.2f} MB, "
+              f"view bytes {p['gathered_view_bytes']/1e6:.2f} MB, "
+              f"occupancy max {p['page_occupancy_max']:.2f}, "
+              f"{p['preemptions']} preemptions)")
+    if "paged_vs_gather_speedup" in results:
+        print(f"paged vs gather: {results['paged_vs_gather_speedup']:.2f}x "
+              "(tokens identical)")
     print(f"speedup: {results['speedup']:.2f}x  -> {args.out}")
     return results
 

@@ -12,8 +12,6 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import zoo
 from repro.core.convnet import ConvNetExecutor, make_small_convnet

@@ -5,7 +5,6 @@ data pipeline, STREAM_GD-form optimizer, checkpointing, crash recovery.
 Run:  PYTHONPATH=src python examples/train_convnet.py [--steps 300]
 """
 import argparse
-import os
 import shutil
 import time
 

@@ -8,7 +8,7 @@ of the same family.  The four assigned input-shape suites live in
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ All paths are verified against each other in tests.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Sequence
 

@@ -14,7 +14,7 @@ Calibration targets (asserted loosely in tests/benchmarks):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 from .tiling import ConvLayerSpec, Tile4D, TilePerf, optimize_tile, tile_spm_bytes

@@ -13,10 +13,9 @@ and tiling for a 128 MB VMEM are the same problem at different constants.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Iterator, Sequence
+from typing import Iterator
 
 # ---------------------------------------------------------------------------
 # Layer and tile descriptors

@@ -1,5 +1,11 @@
 """Model substrate: all assigned architecture families."""
-from .api import VLM, build_model, input_specs  # noqa: F401
+from .api import (  # noqa: F401
+    VLM,
+    build_model,
+    cache_page_specs,
+    input_specs,
+    paged_input_specs,
+)
 from .common import AxisRules, DEFAULT_RULES, PSpec  # noqa: F401
 from .encdec import EncDecLM  # noqa: F401
 from .transformer import DecoderLM  # noqa: F401

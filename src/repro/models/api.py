@@ -2,9 +2,10 @@
 
 ``build_model(cfg)`` returns a model object with the uniform surface:
   param_specs / init / abstract / forward / loss / prefill / decode_step /
-  cache_specs.  ``input_specs(cfg, shape)`` builds the ShapeDtypeStruct
-  stand-ins for every model input of a (arch × shape) dry-run cell — no
-  device allocation.
+  decode_step_paged / extend_step / cache_specs / cache_page_specs.
+``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins for every
+model input of a (arch × shape) dry-run cell — no device allocation;
+``paged_input_specs`` does the same for the block-table-native decode path.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.configs.shapes import ShapeSuite
-from .common import PSpec, abstract_params, init_params
+from .common import PSpec
 from .encdec import EncDecLM
 from .transformer import DecoderLM
 
@@ -83,6 +84,20 @@ def cache_page_specs(cfg_or_model, lanes: int, n_pages: int, page_size: int):
         else build_model(cfg_or_model)
     )
     return model.cache_page_specs(lanes, n_pages, page_size)
+
+
+def paged_input_specs(cfg_or_model, lanes: int, pages_per_lane: int) -> dict:
+    """ShapeDtypeStruct stand-ins for the ``decode_step_paged`` host inputs
+    (the block-table-native decode surface the paged engine drives): one
+    token per lane, a per-lane block table, per-lane positions and the
+    active mask.  Pair with ``cache_page_specs`` for the pool tree."""
+    i32 = jnp.int32
+    return {
+        "tokens": jax.ShapeDtypeStruct((lanes, 1), i32),
+        "block_tables": jax.ShapeDtypeStruct((lanes, pages_per_lane), i32),
+        "positions": jax.ShapeDtypeStruct((lanes,), i32),
+        "active": jax.ShapeDtypeStruct((lanes,), jnp.bool_),
+    }
 
 
 # ---------------------------------------------------------------------------

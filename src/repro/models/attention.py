@@ -9,9 +9,6 @@ can compile it without a Pallas backend.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -156,6 +153,43 @@ def decode_attention(
     out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_lane_view(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Per-lane contiguous view of a page pool: (n_pages, PS, *t) + table
+    (B, P) → (B, P*PS, *t); -1 entries read as zeros.
+
+    Bit-identical to ``serve.paged_cache.gather_views`` on one layer's pool
+    slice — the decode-view oracle the paged attention paths are proven
+    against.  The view is transient inside the layer (XLA fuses it into the
+    attention contraction); nothing (B, max_len) survives the layer.
+    """
+    n_pages, ps = pool.shape[0], pool.shape[1]
+    b, p = block_table.shape
+    view = jnp.take(pool, jnp.clip(block_table, 0, n_pages - 1), axis=0)
+    mask = (block_table >= 0).reshape((b, p) + (1,) * (pool.ndim - 1))
+    view = jnp.where(mask, view, jnp.zeros((), pool.dtype))
+    return view.reshape((b, p * ps) + pool.shape[2:])
+
+
+def paged_decode_attention_xla(
+    q: jax.Array,             # (B, 1, H, D) one decode token per lane
+    k_pool: jax.Array,        # (n_pages, PS, Hkv, D) one layer's page pool
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (B, P) int32, -1 = unallocated
+    positions: jax.Array,     # (B,) index of each lane's new token
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """XLA paged decode attention: a transient per-layer page gather feeding
+    the exact ``decode_attention`` math of the gather path (bit-exact by
+    construction); the fused Pallas kernel (``kernels/paged_attn``) is the
+    no-gather TPU form of the same contraction."""
+    kc = paged_lane_view(k_pool, block_table)
+    vc = paged_lane_view(v_pool, block_table)
+    return decode_attention(q, kc, vc, position=positions, window=window,
+                            scale=scale)
 
 
 def attend(

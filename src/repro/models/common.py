@@ -9,7 +9,6 @@ rule table (``dist.sharding``).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any
 

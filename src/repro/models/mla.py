@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import decode_attention, flash_attention_xla
+from .attention import flash_attention_xla, paged_lane_view
 from .common import AxisRules, PSpec, constrain, rms_norm, rope
 
 
@@ -101,6 +101,38 @@ def mla_attention(
     return y, cache
 
 
+def _absorbed_attend(cfg, p, q_nope, q_rope, latent, k_rope, mask):
+    """The weight-absorbed attention contraction shared by every MLA decode
+    / extend path:
+
+    scores_h(t) = q_abs_h · latent_t + q_rope_h · k_rope_t
+    out_h       = (Σ_t a_t latent_t) · W_vb_h
+
+    q_nope/q_rope: (B,S,H,·); latent/k_rope: (B,T,·); mask broadcastable to
+    the (B,H,S,T) score tensor.  bf16 cache reads + f32 MXU accumulation —
+    no materialized f32 copy of the latent cache."""
+    m = cfg.mla
+    h = cfg.n_heads
+    qk, qr, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    rank = m.kv_lora_rank
+    wk_b = p["wk_b"].reshape(rank, h, qk)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32)   # (B,S,H,rank)
+    scale = float(qk + qr) ** -0.5
+    s_lat = jnp.einsum("bshr,btr->bhst", q_abs.astype(latent.dtype), latent,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshq,btq->bhst", q_rope.astype(k_rope.dtype), k_rope,
+                        preferred_element_type=jnp.float32)
+    s = (s_lat + s_rope) * scale                          # (B,H,S,T)
+    s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", a.astype(latent.dtype), latent,
+                     preferred_element_type=jnp.float32)
+    wv_b = p["wv_b"].reshape(rank, h, vd)
+    return jnp.einsum("bshr,rhv->bshv", ctx.astype(wv_b.dtype), wv_b,
+                      preferred_element_type=jnp.float32)
+
+
 def mla_decode(
     cfg, p, x, cache: dict, position, rules: AxisRules,
 ) -> tuple[jax.Array, dict]:
@@ -112,8 +144,7 @@ def mla_decode(
     m = cfg.mla
     b, s1, d = x.shape                      # s1 == 1
     h = cfg.n_heads
-    qk, qr, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
-    rank = m.kv_lora_rank
+    vd = m.v_head_dim
     position = jnp.asarray(position, jnp.int32)
     per_slot = position.ndim == 1           # (B,) paged-serving depths
     if per_slot:
@@ -140,30 +171,87 @@ def mla_decode(
         )
     latent = constrain(latent, rules, "batch", "cache_seq", None)
 
-    wk_b = p["wk_b"].reshape(rank, h, qk)
-    # absorbed decode with bf16 cache reads + f32 accumulation (no
-    # materialized f32 copy of the latent cache)
-    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b,
-                       preferred_element_type=jnp.float32)   # (B,1,H,rank)
-    scale = float(qk + qr) ** -0.5
-    s_lat = jnp.einsum("bshr,btr->bhst", q_abs.astype(latent.dtype), latent,
-                       preferred_element_type=jnp.float32)
-    s_rope = jnp.einsum("bshq,btq->bhst", q_rope.astype(k_rope.dtype), k_rope,
-                        preferred_element_type=jnp.float32)
-    s = (s_lat + s_rope) * scale                          # (B,H,1,Smax)
     kpos = jnp.arange(latent.shape[1], dtype=jnp.int32)
     if per_slot:
-        s = jnp.where((kpos[None, :] <= position[:, None])[:, None, None, :],
-                      s, -1e30)
+        mask = (kpos[None, :] <= position[:, None])[:, None, None, :]
     else:
-        s = jnp.where((kpos <= position)[None, None, None], s, -1e30)
-    a = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhst,btr->bshr", a.astype(latent.dtype), latent,
-                     preferred_element_type=jnp.float32)
-    wv_b = p["wv_b"].reshape(rank, h, vd)
-    out = jnp.einsum("bshr,rhv->bshv", ctx.astype(wv_b.dtype), wv_b,
-                     preferred_element_type=jnp.float32)
+        mask = (kpos <= position)[None, None, None]
+    out = _absorbed_attend(cfg, p, q_nope, q_rope, latent, k_rope, mask)
     y = out.reshape(b, 1, h * vd).astype(x.dtype) @ p["wo"]
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+def mla_decode_paged(
+    cfg, p, x, cache: dict, block_table, positions, active, rules: AxisRules,
+) -> tuple[jax.Array, dict]:
+    """Absorbed decode directly over latent/k_rope page pools.
+
+    cache: {"latent": (n_pages, PS, rank), "k_rope": (n_pages, PS, qr)} —
+    one layer's pool slice.  The new token's latents scatter into the lane's
+    current page (inactive / unallocated lanes drop via the above-pool
+    sentinel, exactly ``paged_cache.absorb_decode``); the attention reads a
+    transient per-layer lane view, so the engine never materializes the
+    dense (B, max_len) cache tree.  Bit-exact vs the gather path.
+
+    Always the XLA form: the absorbed score is a two-term contraction
+    (q_abs·latent + q_rope·k_rope) the single-pool fused Pallas kernel does
+    not cover — ``EngineConfig.attn_impl='pallas'`` applies to GQA layers
+    only (a fused MLA paged kernel is a recorded follow-on)."""
+    b, s1, d = x.shape                      # s1 == 1
+    h = cfg.n_heads
+    vd = cfg.mla.v_head_dim
+    n_pages, ps = cache["latent"].shape[0], cache["latent"].shape[1]
+    positions = jnp.asarray(positions, jnp.int32)
+    q_nope, q_rope = _project_q_at(cfg, p, x, positions[:, None])
+    new_latent, new_krope = _latent_kv_at(cfg, p, x, positions[:, None])
+    page = jnp.take_along_axis(
+        block_table, (positions // ps)[:, None], axis=1
+    )[:, 0]
+    page = jnp.where(active & (page >= 0), page, n_pages)   # drop sentinel
+    off = positions % ps
+    latent_pool = cache["latent"].at[page, off].set(
+        new_latent[:, 0].astype(cache["latent"].dtype), mode="drop"
+    )
+    krope_pool = cache["k_rope"].at[page, off].set(
+        new_krope[:, 0].astype(cache["k_rope"].dtype), mode="drop"
+    )
+    latent_pool = constrain(latent_pool, rules, "pages", None, None)
+    latent = paged_lane_view(latent_pool, block_table)      # (B, cap, rank)
+    k_rope = paged_lane_view(krope_pool, block_table)
+    kpos = jnp.arange(latent.shape[1], dtype=jnp.int32)
+    mask = (kpos[None, :] <= positions[:, None])[:, None, None, :]
+    out = _absorbed_attend(cfg, p, q_nope, q_rope, latent, k_rope, mask)
+    y = out.reshape(b, 1, h * vd).astype(x.dtype) @ p["wo"]
+    return y, {"latent": latent_pool, "k_rope": krope_pool}
+
+
+def mla_extend(
+    cfg, p, x, cache: dict, position, rules: AxisRules,
+) -> tuple[jax.Array, dict]:
+    """Chunked-prefill extend in the absorbed form: write the chunk's
+    latent/k_rope at [position, position+C) into the cache view and score
+    every chunk query against all cached latents (the chunk's own causal
+    prefix included via absolute positions) — the multi-token counterpart
+    of ``mla_decode`` that closes the ``prefill_chunk`` gap for MLA."""
+    b, c, d = x.shape
+    h = cfg.n_heads
+    vd = cfg.mla.v_head_dim
+    positions = position + jnp.arange(c, dtype=jnp.int32)
+    q_nope, q_rope = _project_q_at(cfg, p, x, positions[None])
+    new_latent, new_krope = _latent_kv_at(cfg, p, x, positions[None])
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], new_latent.astype(cache["latent"].dtype), position,
+        axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], new_krope.astype(cache["k_rope"].dtype), position,
+        axis=1
+    )
+    latent = constrain(latent, rules, "batch", "cache_seq", None)
+    kpos = jnp.arange(latent.shape[1], dtype=jnp.int32)
+    mask = (kpos[None, :] <= positions[:, None])[None, None]   # (1,1,C,cap)
+    out = _absorbed_attend(cfg, p, q_nope, q_rope, latent, k_rope, mask)
+    y = out.reshape(b, c, h * vd).astype(x.dtype) @ p["wo"]
     return y, {"latent": latent, "k_rope": k_rope}
 
 

@@ -82,7 +82,6 @@ def moe_ffn(
     """Returns (output (B,S,D), aux_loss scalar)."""
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.experts_per_token
-    f = cfg.moe_d_ff or cfg.d_ff
     act = activation(cfg.act)
 
     if n_groups is None:

@@ -90,6 +90,13 @@ def rglru_block(cfg, p, x, rules: AxisRules, state=None, conv_state=None):
     return y, {"h": h_last, "conv": new_conv}   # f32 state (tiny, sensitive)
 
 
+def rglru_extend(cfg, p, x, cache, rules: AxisRules):
+    """Multi-token extend (chunked prefill): the associative-scan block
+    seeded with the carried (h, conv) — no chunk-divisibility constraint."""
+    return rglru_block(cfg, p, x, rules, state=cache["h"],
+                       conv_state=cache["conv"])
+
+
 def rglru_decode(cfg, p, x, cache, rules: AxisRules):
     """x: (B,1,D); O(1) state update."""
     xb = x @ p["w_x"]

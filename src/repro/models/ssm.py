@@ -39,7 +39,6 @@ def ssm_specs(cfg) -> dict:
 def _split_proj(cfg, zxbcdt):
     s = cfg.ssm
     di = s.d_inner(cfg.d_model)
-    nh = s.n_heads(cfg.d_model)
     n = s.d_state
     z = zxbcdt[..., :di]
     x = zxbcdt[..., di: 2 * di]
@@ -176,6 +175,26 @@ def ssm_block(cfg, p, x, rules: AxisRules, init_state=None, conv_state=None):
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
     out = y @ p["out_proj"]
     return out, {"state": final, "conv": new_conv}   # f32 state (tiny, sensitive)
+
+
+def ssm_extend(cfg, p, x, cache, rules: AxisRules):
+    """Multi-token extend (chunked prefill): run the chunked SSD forward
+    seeded with the carried (state, conv) and emit the updated carry.
+
+    ``ssd_chunked`` needs the sequence length divisible by its chunk; a
+    ragged extend is split into ≤chunk slices threaded through the state
+    (each slice is its own chunk) — identical recurrence, static shapes."""
+    q = cfg.ssm.chunk
+    sl = x.shape[1]
+    state, conv = cache["state"], cache["conv"]
+    ys = []
+    for i0 in range(0, sl, q):
+        y, c = ssm_block(cfg, p, x[:, i0: i0 + q], rules,
+                         init_state=state, conv_state=conv)
+        state, conv = c["state"], c["conv"]
+        ys.append(y)
+    y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
+    return y, {"state": state, "conv": conv}
 
 
 def ssm_decode(cfg, p, x, cache, rules: AxisRules):

@@ -16,9 +16,6 @@ Each layer = pre-norm temporal mix (attention / MLA / SSD / RG-LRU)
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -26,7 +23,7 @@ from . import mla as _mla
 from . import moe as _moe
 from . import rglru as _rglru
 from . import ssm as _ssm
-from .attention import attend, decode_attention
+from .attention import attend, decode_attention, paged_decode_attention_xla
 from .common import (
     AxisRules,
     DEFAULT_RULES,
@@ -39,7 +36,6 @@ from .common import (
     init_params,
     rms_norm,
     rope,
-    stack_specs,
 )
 
 # ---------------------------------------------------------------------------
@@ -127,6 +123,52 @@ def attn_decode(cfg, p, x, cache, position, rules, window=None):
     kc = constrain(kc, rules, "batch", "cache_seq", "kv_heads", None)
     vc = constrain(vc, rules, "batch", "cache_seq", "kv_heads", None)
     out = decode_attention(q, kc, vc, position=position, window=window)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return y, {"k": kc, "v": vc}
+
+
+def attn_decode_paged(cfg, p, x, cache, block_table, positions, active, rules,
+                      window=None, impl="xla"):
+    """One-token decode directly against the page pools.
+
+    cache: {"k"/"v": (n_pages, PS, Hkv, hd)} — one layer's pool slice.  The
+    new token's k/v scatter into the lane's current page (inactive /
+    unallocated lanes drop via the above-pool sentinel, exactly
+    ``paged_cache.absorb_decode``), then one decode query per lane attends
+    over the pages its block table names: the fused Pallas kernel on
+    ``impl='pallas'``, the bit-exact transient-gather XLA form otherwise.
+    The engine-side dense (B, max_len, ...) cache tree is never built."""
+    b, _, d = x.shape
+    n_pages, ps = cache["k"].shape[0], cache["k"].shape[1]
+    positions = jnp.asarray(positions, jnp.int32)
+    q, k, v = _qkv(cfg, p, x)
+    if not cfg.learned_positions:
+        q = rope(q, positions[:, None], cfg.rope_theta)
+        k = rope(k, positions[:, None], cfg.rope_theta)
+    page = jnp.take_along_axis(
+        block_table, (positions // ps)[:, None], axis=1
+    )[:, 0]
+    page = jnp.where(active & (page >= 0), page, n_pages)   # drop sentinel
+    off = positions % ps
+    kc = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype),
+                                      mode="drop")
+    vc = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype),
+                                      mode="drop")
+    kc = constrain(kc, rules, "pages", None, "kv_heads", None)
+    vc = constrain(vc, rules, "pages", None, "kv_heads", None)
+    if impl == "pallas" and window is None:
+        # the fused kernel has no sliding-window mask; windowed layers
+        # (hybrid local attention) take the XLA form below
+        from repro.kernels import ops as kops
+
+        lengths = jnp.where(active, positions + 1, 0)
+        out = kops.paged_attention(
+            q.reshape(b, cfg.n_heads, cfg.hd), kc, vc, block_table, lengths
+        )[:, None]
+    else:
+        out = paged_decode_attention_xla(
+            q, kc, vc, block_table, positions, window=window
+        )
     y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
     return y, {"k": kc, "v": vc}
 
@@ -306,16 +348,65 @@ def layer_decode(cfg, kind, p, x, cache, position, rules):
     return x, cache
 
 
-def layer_extend(cfg, kind, p, x, cache, position, rules):
-    """Multi-token extend (chunked prefill).  Only attention-state layer
-    kinds support it — recurrent kinds (ssm/rec) carry a stepwise state and
-    are prefilled whole-prompt (see ``DecoderLM.supports_chunked_prefill``)."""
+def layer_decode_paged(cfg, kind, p, x, cache, block_table, positions, active,
+                       rules, impl="xla"):
+    """One-token decode over one layer's *paged* cache slice: attention
+    kinds read/write the page pools through the block table; recurrent
+    kinds step their per-lane state as in ``layer_decode``, with inactive
+    lanes keeping their previous state (``absorb_decode`` semantics)."""
     if kind in ("dense", "moe"):
-        if cfg.mla:
-            raise NotImplementedError("chunked prefill: MLA absorbed extend")
         h = _norm(cfg, p["ln1"], x)
-        y, cache = attn_extend(cfg, p["attn"], h, cache, position, rules,
-                               cfg.sliding_window)
+        if cfg.mla:
+            y, cache = _mla.mla_decode_paged(
+                cfg, p["attn"], h, cache, block_table, positions, active, rules
+            )
+        else:
+            y, cache = attn_decode_paged(
+                cfg, p["attn"], h, cache, block_table, positions, active,
+                rules, cfg.sliding_window, impl
+            )
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            y, _ = _moe.moe_ffn(cfg, p["moe"], h, rules, n_groups=1, drop=False)
+        else:
+            y = mlp_apply(cfg, p["mlp"], h, rules)
+        x = x + y
+    elif kind == "attn":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = attn_decode_paged(
+            cfg, p["attn"], h, cache, block_table, positions, active, rules,
+            cfg.rglru.attn_window, impl
+        )
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    elif kind in ("ssm", "rec"):
+        x, new_cache = layer_decode(cfg, kind, p, x, cache, positions, rules)
+
+        def _keep(old, new):
+            sel = active.reshape((active.shape[0],) + (1,) * (old.ndim - 1))
+            return jnp.where(sel, new.astype(old.dtype), old)
+
+        cache = jax.tree.map(_keep, cache, new_cache)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def layer_extend(cfg, kind, p, x, cache, position, rules):
+    """Multi-token extend (chunked prefill) — every layer kind: attention
+    caches extend by a KV chunk, MLA by an absorbed latent chunk, and the
+    recurrent kinds (ssm/rec) thread their stepped state through the chunk
+    (so ``prefill_chunk`` applies to every family)."""
+    if kind in ("dense", "moe"):
+        h = _norm(cfg, p["ln1"], x)
+        if cfg.mla:
+            y, cache = _mla.mla_extend(cfg, p["attn"], h, cache, position,
+                                       rules)
+        else:
+            y, cache = attn_extend(cfg, p["attn"], h, cache, position, rules,
+                                   cfg.sliding_window)
         x = x + y
         h = _norm(cfg, p["ln2"], x)
         if kind == "moe":
@@ -330,8 +421,18 @@ def layer_extend(cfg, kind, p, x, cache, position, rules):
         x = x + y
         h = _norm(cfg, p["ln2"], x)
         x = x + mlp_apply(cfg, p["mlp"], h, rules)
+    elif kind == "ssm":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = _ssm.ssm_extend(cfg, p["mix"], h, cache, rules)
+        x = x + y
+    elif kind == "rec":
+        h = _norm(cfg, p["ln1"], x)
+        y, cache = _rglru.rglru_extend(cfg, p["mix"], h, cache, rules)
+        x = x + y
+        h = _norm(cfg, p["ln2"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h, rules)
     else:
-        raise NotImplementedError(f"chunked prefill over '{kind}' layers")
+        raise ValueError(kind)
     return x, cache
 
 
@@ -626,13 +727,61 @@ class DecoderLM:
         logits = self._head(params, x, rules)
         return logits, new_caches
 
+    def decode_step_paged(self, params, pools, block_tables, tokens,
+                          positions, active, rules=None, attn_impl="xla"):
+        """Zero-materialization decode: tokens (B,1), block_tables (B,P),
+        positions (B,), active (B,) → (logits (B,1,V), pools).
+
+        The paged counterpart of ``decode_step``: seq-cache leaves are page
+        *pools* (reps, n_pages, PS, *t) read/written through the block table
+        inside each layer (``attn_decode_paged`` / ``mla_decode_paged``), so
+        the engine never gathers a dense (B, max_len, ...) cache tree.
+        Recurrent-state leaves keep the per-lane layout and step in place
+        (inactive lanes keep their state).  Stacked decode layout only."""
+        cfg = self.cfg
+        if cfg.decode_unroll_layers:
+            raise NotImplementedError("paged decode needs the stacked layout")
+        rules = rules or AxisRules(DEFAULT_RULES)
+        x = self._embed(params, tokens, rules)
+        positions = jnp.asarray(positions, jnp.int32)
+        block_tables = jnp.asarray(block_tables, jnp.int32)
+        new_caches = []
+        for si, (pattern, reps) in enumerate(self.segments):
+            def body(h, xs, _pattern=pattern):
+                pslice, cs = xs
+                new_cs = {}
+                for i, kind in enumerate(_pattern):
+                    key = f"s{i}_{kind}"
+                    h, c = layer_decode_paged(
+                        cfg, kind, pslice[key], h, cs[key], block_tables,
+                        positions, active, rules, attn_impl
+                    )
+                    new_cs[key] = c
+                return h, new_cs
+
+            if cfg.scan_layers and reps > 1:
+                x, new_cache = jax.lax.scan(
+                    body, x, (params[f"seg{si}"], pools[si])
+                )
+            else:
+                slices = []
+                for r in range(reps):
+                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    cslice = jax.tree.map(lambda a: a[r], pools[si])
+                    x, c = body(x, (pslice, cslice))
+                    slices.append(c)
+                new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+            new_caches.append(new_cache)
+        logits = self._head(params, x, rules)
+        return logits, new_caches
+
     @property
     def supports_chunked_prefill(self) -> bool:
-        """True when every layer kind can extend by a multi-token chunk
-        (attention caches only — recurrent state steps token-by-token, and
-        the MLA absorbed-extend form is not implemented)."""
-        kinds = {k for pattern, _ in self.segments for k in pattern}
-        return kinds <= {"dense", "moe", "attn"} and not self.cfg.mla
+        """Every DecoderLM layer kind can extend by a multi-token chunk:
+        attention/MLA caches extend by a KV (latent) chunk and the recurrent
+        kinds thread their stepped state through ``ssm_extend`` /
+        ``rglru_extend`` — ``prefill_chunk`` applies to every family."""
+        return True
 
     def extend_step(self, params, cache, tokens, position, rules=None):
         """tokens (B, C), position scalar int32 → (logits (B, C, V), cache).

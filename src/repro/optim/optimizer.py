@@ -9,7 +9,6 @@ fit the per-device HBM budget (recorded in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -10,10 +10,14 @@ SMC-network serving pattern maps onto directly:
 * ``scheduler.Scheduler`` — admission control, prefill chunking, FCFS /
   shortest-prompt-first ordering, and preempt-longest-running when the pool
   runs dry (the host only coordinates — it never touches the stream);
-* the model's ``decode_step`` over gathered per-lane views with *per-lane*
-  positions — lanes advance independently (true continuous batching), unlike
-  v1's shared-max-position stepping which attended zero padding on ragged
-  batches.
+* the model's ``decode_step_paged`` over the page pools themselves with
+  *per-lane* positions — the model reads/writes pages through the block
+  table, so the dense ``(B, max_len, ...)`` gathered view is never
+  materialized (the paper's never-copy-to-host streaming discipline), and
+  lanes advance independently (true continuous batching), unlike v1's
+  shared-max-position stepping which attended zero padding on ragged
+  batches.  ``EngineConfig.decode_path='gather'`` keeps the old
+  materialize-then-decode path as the bit-exactness oracle.
 
 The greedy/temperature sampling API (``Request``, ``submit``, ``step``,
 ``run``) is unchanged from v1; the dense engine survives as
@@ -33,7 +37,9 @@ from .paged_cache import (
     absorb_decode,
     gather_lane_view,
     gather_views,
+    merge_lane_state,
     scatter_lane_view,
+    strip_seq_leaves,
 )
 from .scheduler import Scheduler, SchedulerConfig
 
@@ -60,8 +66,19 @@ class EngineConfig:
     policy: str = "fcfs"            # fcfs | spf
     max_step_tokens: int = 0        # 0 = unbounded per-step token budget
     prefill_chunk: int = 0          # 0 = whole-prompt prefill
-    # paged read path: 'xla' advanced-indexing gather, or 'pallas' for the
-    # kernels/paged_attn read kernel (interpret mode off-TPU)
+    # decode path: 'paged' hands block tables straight to the model
+    # (decode_step_paged — the dense (B, max_len) gathered view is never
+    # built); 'gather' is the materialize-then-decode fallback oracle the
+    # paged path is proven bit-exact against
+    decode_path: str = "paged"
+    # paged-path attention read: 'xla' (transient per-layer gather, bit-
+    # exact vs the gather path) or 'pallas' (the fused paged_decode_attention
+    # kernel — no gather at all; interpret mode off-TPU).  GQA layers only:
+    # MLA layers (absorbed two-term scores) and sliding-window layers always
+    # take the XLA form whatever this is set to
+    attn_impl: str = "xla"
+    # gather-path page read: 'xla' advanced-indexing gather, or 'pallas' for
+    # the kernels/paged_attn gather kernel (interpret mode off-TPU)
     gather_impl: str = "xla"
 
 
@@ -89,7 +106,15 @@ class ServeEngine:
     a paged KV cache and a request scheduler."""
 
     def __init__(self, model, params, ecfg: EngineConfig, rules=None):
+        if ecfg.decode_path not in ("paged", "gather"):
+            raise ValueError(f"unknown decode_path: {ecfg.decode_path!r}")
         model = stacked_decode_model(model)
+        if ecfg.decode_path == "paged" and not hasattr(model,
+                                                      "decode_step_paged"):
+            raise TypeError(
+                f"{type(model).__name__} has no decode_step_paged; serve it "
+                "with decode_path='gather'"
+            )
         self.model = model
         self.params = params
         self.ecfg = ecfg
@@ -105,7 +130,8 @@ class ServeEngine:
             model, lanes=ecfg.batch_slots, n_pages=n_pages, page_size=ps,
             max_len=ecfg.max_len,
         )
-        chunk = ecfg.prefill_chunk if model.supports_chunked_prefill else 0
+        chunk = (ecfg.prefill_chunk
+                 if getattr(model, "supports_chunked_prefill", False) else 0)
         self.sched = Scheduler(SchedulerConfig(
             policy=ecfg.policy, max_step_tokens=ecfg.max_step_tokens,
             prefill_chunk=chunk,
@@ -124,23 +150,39 @@ class ServeEngine:
     # -- jitted pieces --------------------------------------------------------
 
     def _decode_impl(self, params, pools, bt, tokens, positions, active):
-        views = gather_views(pools, bt, impl=self.ecfg.gather_impl)
-        logits, new_views = self.model.decode_step(
-            params, views, tokens, positions, self.rules
+        if self.ecfg.decode_path == "gather":
+            # fallback oracle: materialize the dense per-lane views, decode,
+            # scatter the written column back into the pools
+            views = gather_views(pools, bt, impl=self.ecfg.gather_impl)
+            logits, new_views = self.model.decode_step(
+                params, views, tokens, positions, self.rules
+            )
+            pools = absorb_decode(
+                pools, new_views, bt, positions, active, self.cache.page_size
+            )
+            return logits, pools
+        # zero-materialization path: the model reads/writes the page pools
+        # through the block table (attn_decode_paged / mla_decode_paged)
+        return self.model.decode_step_paged(
+            params, pools, bt, tokens, positions, active, self.rules,
+            attn_impl=self.ecfg.attn_impl,
         )
-        pools = absorb_decode(
-            pools, new_views, bt, positions, active, self.cache.page_size
-        )
-        return logits, pools
 
-    def _extend_impl(self, params, pools, pages, tokens, start):
+    def _extend_impl(self, params, pools, state, pages, tokens, start):
         views = gather_lane_view(pools, pages)
+        if state is not None:
+            # recurrent-state leaves ride per request, not in the pools
+            views = merge_lane_state(views, state)
         logits, new_views = self.model.extend_step(
             params, views, tokens, start, self.rules
         )
         pools = scatter_lane_view(pools, pages, new_views,
                                   self.cache.page_size)
-        return logits, pools
+        # carry only the recurrent-state leaves forward (seq leaves are
+        # already scattered into the pages; holding them would pin a whole
+        # dense lane of KV per in-flight prefill)
+        new_state = strip_seq_leaves(new_views) if state is not None else None
+        return logits, pools, new_state
 
     # -- request handling ------------------------------------------------------
 
@@ -159,6 +201,17 @@ class ServeEngine:
 
     # -- prefill ---------------------------------------------------------------
 
+    def _fresh_extend_state(self):
+        """Zero single-request state tree seeding a chunked prefill's
+        recurrent state (None for models without state leaves; seq leaves
+        are scalar placeholders — see ``strip_seq_leaves``)."""
+        if not self.cache.has_state_leaves():
+            return None
+        return strip_seq_leaves(jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.model.cache_specs(1, self.cache.capacity),
+        ))
+
     def _run_prefill_chunk(self, st, chunk: int):
         toks = st.resume_tokens[st.prefilled: st.prefilled + chunk]
         # -1-pad the page list to the fixed per-lane width so _extend keeps
@@ -166,14 +219,21 @@ class ServeEngine:
         # and are dropped on scatter), instead of retracing per page count
         pages = np.full(self.cache.pages_per_lane, -1, np.int32)
         pages[: len(st.pages)] = st.pages
-        logits, self.cache.pools = self._extend(
-            self.params, self.cache.pools, jnp.asarray(pages),
-            jnp.asarray(toks, jnp.int32)[None],
+        if st.prefilled == 0:
+            st.extend_state = self._fresh_extend_state()
+        logits, self.cache.pools, st.extend_state = self._extend(
+            self.params, self.cache.pools, st.extend_state,
+            jnp.asarray(pages), jnp.asarray(toks, jnp.int32)[None],
             jnp.asarray(st.prefilled, jnp.int32),
         )
         st.prefilled += chunk
         st.last_logits = logits[0, -1]
         self.stats["prefill_tokens"] += chunk
+        if st.remaining_prefill == 0 and st.extend_state is not None:
+            # prefill complete: hold the recurrent state until a lane frees
+            # (same hand-off as the whole-prompt path's held cache)
+            st.state_cache = st.extend_state
+            st.extend_state = None
 
     def _run_prefill_whole(self, st):
         toks = jnp.asarray(st.resume_tokens, jnp.int32)[None]

@@ -21,7 +21,6 @@ is selectable via ``impl='pallas'``.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -134,6 +133,30 @@ def gather_lane_view(pools, pages: jax.Array):
     """Single-request contiguous view from its own pages (chunked prefill):
     seq leaves → (layers, 1, n_req_pages*PS, *t); state leaves pass."""
     return gather_views(pools, pages[None])
+
+
+def merge_lane_state(views, state):
+    """Swap the recurrent-state leaves of a single-lane view tree for the
+    request's carried extend state (chunked prefill threads SSD / RG-LRU
+    state host-side per request until a lane is assigned; seq leaves come
+    from the gathered pages and win unchanged)."""
+
+    def leaf(path, v, s):
+        return v if _is_seq(path) else s
+
+    return jax.tree_util.tree_map_with_path(leaf, views, state)
+
+
+def strip_seq_leaves(tree):
+    """Shrink a single-lane cache tree to its recurrent-state leaves: seq
+    leaves become scalar zero placeholders (structure preserved for
+    ``merge_lane_state``) so a carried extend state costs O(state), not a
+    whole dense lane of KV — the allocation the paged path exists to avoid."""
+
+    def leaf(path, x):
+        return jnp.zeros((), x.dtype) if _is_seq(path) else x
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
 
 
 def scatter_lane_view(pools, pages: jax.Array, views, page_size: int):

@@ -49,6 +49,7 @@ class RequestState:
     preemptions: int = 0
     last_logits: object = None      # final prefill logits (one vocab row)
     state_cache: object = None      # held recurrent state until a lane frees
+    extend_state: object = None     # chunked-prefill carried SSD/RG-LRU state
 
     @property
     def remaining_prefill(self) -> int:

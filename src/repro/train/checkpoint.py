@@ -15,7 +15,6 @@ import json
 import os
 import shutil
 import threading
-from typing import Any
 
 import jax
 import numpy as np
@@ -147,7 +146,7 @@ def restore(
             key = pre[:-1]
             arr = z[key]
             if key in meta.get("dtypes", {}):
-                import ml_dtypes
+                import ml_dtypes  # noqa: F401  (registers bf16 et al. with numpy)
                 arr = arr.view(np.dtype(meta["dtypes"][key]))
             return arr
 

@@ -8,11 +8,9 @@ by tests with injected failures.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
-import numpy as np
 
 from repro.dist.fault import FaultInjector, StragglerDetector
 from repro.optim.optimizer import Optimizer, get_optimizer

@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.core.roofline import analyze_hlo_text, parse_hlo

@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -138,6 +137,69 @@ def test_flash_attention_blocks_sweep(rng):
     ]
     for o in outs[1:]:
         np.testing.assert_allclose(outs[0], o, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged_decode_attention — kernel vs oracle over ragged block tables
+# ---------------------------------------------------------------------------
+
+# lanes covering the ragged-table envelope: a partial last page, a single
+# page, the full pages_per_lane width, and an empty (inactive) lane
+_RAGGED_CASES = [
+    # (block-table rows, lengths); pool is 12 pages of 16 tokens, P=4
+    pytest.param([[0, 3, -1, -1], [5, -1, -1, -1], [1, 2, 7, 9], [4, 6, -1, -1]],
+                 [20, 9, 64, 32], id="mixed-partial-single-max"),
+    pytest.param([[2, -1, -1, -1]], [1], id="single-token-single-page"),
+    pytest.param([[0, 1, 2, 3]], [63], id="max-pages-partial-last"),
+    pytest.param([[0, 1, 2, 3]], [64], id="max-pages-exact"),
+    pytest.param([[10, -1, -1, -1], [-1, -1, -1, -1]], [16, 0],
+                 id="exact-page-plus-empty-lane"),
+]
+
+
+@pytest.mark.parametrize("table,lengths", _RAGGED_CASES)
+@pytest.mark.parametrize("dt", [F32, BF16])
+def test_paged_decode_attention_ragged(rng, table, lengths, dt):
+    """Fused kernel == gather-then-attend oracle on ragged block tables
+    (partial last page, single page, max pages, empty lanes)."""
+    n, ps, g, d, h = 12, 16, 2, 32, 4
+    kpool = jnp.asarray(rng.normal(size=(n, ps, g, d)), dt)
+    vpool = jnp.asarray(rng.normal(size=(n, ps, g, d)), dt)
+    bt = jnp.asarray(table, jnp.int32)
+    ln = jnp.asarray(lengths, jnp.int32)
+    b = bt.shape[0]
+    q = jnp.asarray(rng.normal(size=(b, h, d)), dt)
+    got = ops.paged_attention(q, kpool, vpool, bt, ln)
+    want = ref.paged_decode_attention(
+        q.reshape(b, g, h // g, d), kpool.transpose(2, 0, 1, 3),
+        vpool.transpose(2, 0, 1, 3), bt, ln,
+    ).reshape(b, h, d)
+    # fully-masked lanes (length 0) are don't-care outputs: the engine only
+    # reads active lanes — compare where at least one key is visible
+    visible = np.asarray(ln) > 0
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32)[visible],
+        np.asarray(want, np.float32)[visible], **_tol(dt)
+    )
+
+
+def test_paged_decode_attention_matches_model_xla_path(rng):
+    """The fused kernel and the model layer's XLA paged path agree on the
+    same pools/table/positions (positions = lengths - 1)."""
+    from repro.models.attention import paged_decode_attention_xla
+
+    n, ps, g, d, h = 12, 16, 2, 32, 4
+    kpool = jnp.asarray(rng.normal(size=(n, ps, g, d)), F32)
+    vpool = jnp.asarray(rng.normal(size=(n, ps, g, d)), F32)
+    bt = jnp.asarray([[0, 3, -1, -1], [5, 2, 7, -1], [1, -1, -1, -1]],
+                     jnp.int32)
+    lengths = jnp.asarray([20, 45, 9], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(3, 1, h, d)), F32)
+    got = ops.paged_attention(q[:, 0], kpool, vpool, bt, lengths)
+    # model-layer pools are (n_pages, PS, Hkv, D) — same layout
+    want = paged_decode_attention_xla(q, kpool, vpool, bt, lengths - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[:, 0]),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

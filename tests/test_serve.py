@@ -220,6 +220,128 @@ def test_preemption_then_resume_reproduces_tokens(served):
 
 
 # ---------------------------------------------------------------------------
+# Zero-materialization paged decode == gather oracle (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+# one arch per attention-state family the paged engine serves: GQA attention,
+# MLA absorbed latents, SSD recurrent state, RG-LRU hybrid (rec+local attn)
+PAGED_FAMILIES = ["qwen2.5-3b", "deepseek-v3-671b", "mamba2-130m",
+                  "recurrentgemma-9b"]
+
+
+def _family_model(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(dataclasses.replace(cfg, decode_unroll_layers=False))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", PAGED_FAMILIES)
+def test_decode_step_paged_bitexact_vs_gather(arch):
+    """Model-level: decode_step_paged logits AND post-step pools equal the
+    gather-decode-absorb pipeline bit-for-bit (attention, MLA, SSD, RG-LRU),
+    inactive lanes included."""
+    from repro.serve.paged_cache import absorb_decode
+
+    cfg, model, params = _family_model(arch)
+    ps, max_len = 8, 32
+    paged = PagedKVCache(model, lanes=3, n_pages=8, page_size=ps,
+                         max_len=max_len)
+    prompts = [np.asarray([5, 9, 2, 7, 11], np.int32),
+               np.asarray([3, 1, 4], np.int32)]
+    for slot, prompt in enumerate(prompts):
+        _, pc = model.prefill(params, jnp.asarray(prompt)[None], RULES)
+        pages = paged.alloc(len(prompt) + 1)
+        paged.write_prefill(pages, pc, lane=slot)
+        paged.assign_lane(slot, pages)
+    bt = jnp.asarray(paged.block_tables)
+    toks = jnp.asarray([[5], [3], [0]], jnp.int32)
+    positions = jnp.asarray([5, 3, 0], jnp.int32)
+    active = jnp.asarray([True, True, False])     # lane 2 is idle
+
+    views = gather_views(paged.pools, bt)
+    lg, new_views = model.decode_step(params, views, toks, positions, RULES)
+    pools_g = absorb_decode(paged.pools, new_views, bt, positions, active, ps)
+
+    lp, pools_p = model.decode_step_paged(
+        params, paged.pools, bt, toks, positions, active, RULES
+    )
+    # active lanes bit-exact; the idle lane's logits are don't-care garbage
+    # both engines discard (the gather path attends the lane's own transient
+    # k/v write, the paged path drops it before attention)
+    act = np.asarray(active)
+    assert np.array_equal(np.asarray(lg)[act], np.asarray(lp)[act])
+    for a, b in zip(jax.tree.leaves(pools_g), jax.tree.leaves(pools_p)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", PAGED_FAMILIES)
+def test_paged_decode_path_tokens_match_gather(arch):
+    """Engine-level acceptance bar: the zero-materialization decode path
+    reproduces the gather oracle token-for-token on ragged continuous
+    batching (queueing + refill included) for every served family."""
+    cfg, model, params = _family_model(arch)
+    reqs = lambda: _reqs(cfg, n=4, plen=5, max_new=4, ragged=True)  # noqa: E731
+    want, _ = _serve(ServeEngine, model, params,
+                     EngineConfig(batch_slots=2, max_len=64,
+                                  decode_path="gather"), reqs())
+    got, eng = _serve(ServeEngine, model, params,
+                      EngineConfig(batch_slots=2, max_len=64,
+                                   decode_path="paged"), reqs())
+    assert want == got
+    assert eng.cache.allocator.n_free == eng.cache.n_pages
+
+
+@pytest.mark.parametrize("arch",
+                         ["deepseek-v3-671b", "mamba2-130m",
+                          "recurrentgemma-9b"])
+def test_chunked_prefill_matches_whole_prompt_every_family(arch):
+    """The MLA absorbed-extend and SSD/RG-LRU stepped-state extend close the
+    prefill_chunk gap: chunked == whole-prompt serving for every family
+    (attention is covered by test_chunked_prefill_matches_whole_prompt)."""
+    cfg = get_arch(arch).reduced()
+    if cfg.is_moe:
+        # ample capacity: dropped-token routing is seq-length dependent by
+        # construction; identity holds when nothing drops
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    assert model.supports_chunked_prefill
+    whole, _ = _serve(ServeEngine, model, params,
+                      EngineConfig(batch_slots=2, max_len=64),
+                      _reqs(cfg, n=3, plen=11))
+    chunked, eng = _serve(ServeEngine, model, params,
+                          EngineConfig(batch_slots=2, max_len=64,
+                                       prefill_chunk=4, max_step_tokens=12),
+                          _reqs(cfg, n=3, plen=11))
+    assert whole == chunked
+    assert eng.stats["prefill_tokens"] == 3 * 11
+
+
+def test_paged_decode_pallas_impl_serves_identically(served):
+    """attn_impl='pallas' routes the paged decode through the fused
+    paged_decode_attention kernel (interpret off-TPU) — same greedy tokens
+    as the XLA paged path."""
+    cfg, model, params = served
+    want, _ = _serve(ServeEngine, model, params,
+                     EngineConfig(batch_slots=2, max_len=32),
+                     _reqs(cfg, n=2, max_new=3))
+    got, _ = _serve(ServeEngine, model, params,
+                    EngineConfig(batch_slots=2, max_len=32,
+                                 attn_impl="pallas"),
+                    _reqs(cfg, n=2, max_new=3))
+    assert want == got
+
+
+def test_engine_rejects_unknown_decode_path(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError):
+        ServeEngine(model, params,
+                    EngineConfig(batch_slots=1, max_len=32,
+                                 decode_path="fused"), RULES)
+
+
+# ---------------------------------------------------------------------------
 # EOS handling (regression: early EOS must refill the slot)
 # ---------------------------------------------------------------------------
 
@@ -400,7 +522,7 @@ def test_pallas_gather_impl_serves_identically(served):
                      _reqs(cfg, n=2, max_new=3))
     got, _ = _serve(ServeEngine, model, params,
                     EngineConfig(batch_slots=2, max_len=32,
-                                 gather_impl="pallas"),
+                                 decode_path="gather", gather_impl="pallas"),
                     _reqs(cfg, n=2, max_new=3))
     assert want == got
 
@@ -456,7 +578,21 @@ def test_serve_bench_smoke(tmp_path):
     import json
 
     report = json.loads(out.read_text())
-    assert {"dense", "paged", "speedup", "workload"} <= report.keys()
+    assert {"dense", "paged", "decode_paths", "speedup",
+            "workload"} <= report.keys()
     assert report["paged"]["tokens"] == report["dense"]["tokens"] > 0
     assert report["workload"]["smoke"] is True
     assert results["speedup"] == report["speedup"]
+    # the smoke drives BOTH decode paths and asserts token identity inside
+    # bench_pair — a silent numeric break cannot pass the CI gate
+    assert report["paths_token_identical"] is True
+    assert {"gather", "paged"} == set(report["decode_paths"])
+    for path in ("gather", "paged"):
+        p = report["decode_paths"][path]
+        assert p["step_latency_ms"]["p50"] > 0
+        assert p["gathered_view_bytes"] > 0
+    if report["decode_paths"]["paged"]["decode_memory"]["available"]:
+        # the paged step must not be bigger than the gather step: it never
+        # materializes the dense view the gather path allocates
+        assert (report["decode_paths"]["paged"]["decode_memory"]["peak_live_bytes"]
+                <= report["decode_paths"]["gather"]["decode_memory"]["peak_live_bytes"])
