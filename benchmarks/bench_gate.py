@@ -6,10 +6,15 @@ trajectory lives in git); ``--check`` re-runs them and fails (exit 1) when a
 gated metric regresses more than ``TOLERANCE`` below its baseline.
 
 Gated metrics are *ratios measured on one machine* (paged-vs-dense serving
-speedup, kernel-vs-oracle timing ratios), so they transfer across runners
-far better than absolute wall times; absolute ``*_us`` / latency numbers are
-recorded in the JSON for trend reading but never gated.  Each check takes
-the best of ``--repeats`` runs to shave scheduler noise.
+speedup, swap-vs-recompute preemption speedup, kernel-vs-oracle timing
+ratios), so they transfer across runners far better than absolute wall
+times; absolute ``*_us`` / latency numbers are recorded in the JSON for
+trend reading but never gated.  Each of the ``--repeats`` runs executes in
+a FRESH SUBPROCESS and the gate takes the per-key median: XLA-CPU compile
+choices and thread-pool state vary 2x *between processes* while staying
+stable within one, and ``--update`` and ``--check`` always live in
+different processes — in-process repeats would never sample the variance
+the gate is actually exposed to.
 
 Run:  PYTHONPATH=src python benchmarks/bench_gate.py --check
       PYTHONPATH=src python benchmarks/bench_gate.py --update
@@ -21,6 +26,7 @@ import json
 import os
 import pathlib
 import platform
+import subprocess
 import sys
 
 # fail when current < TOLERANCE x baseline (>20% regression).  The gated
@@ -35,14 +41,17 @@ SERVE_BASELINE = ROOT / "BENCH_serve.json"
 KERNEL_BASELINE = ROOT / "BENCH_kernels.json"
 
 # higher-is-better ratio metrics extracted from each bench's JSON
-GATED_SERVE = ("speedup", "paged_vs_gather_speedup")
-GATED_KERNELS = ("attn.flash_xla.oracle_ratio", "attn.paged_decode.oracle_ratio")
+GATED_SERVE = ("speedup", "paged_vs_gather_speedup",
+               "swap_vs_recompute_speedup")
+GATED_KERNELS = ("attn.flash_xla.oracle_ratio", "attn.paged_decode.oracle_ratio",
+                 "ssd.chunked.oracle_ratio", "moe.dispatch.oracle_ratio")
 
 
 def run_serve() -> dict:
     from benchmarks import serve_bench
 
     r = serve_bench.bench_pair(decode_path="both", size="gate")
+    pre = serve_bench.bench_preempt(size="gate")
     paged = r["decode_paths"]["paged"]
     return {
         "speedup": r["speedup"],
@@ -53,6 +62,17 @@ def run_serve() -> dict:
         "paged_step_p50_ms": paged["step_latency_ms"]["p50"],
         "paged_peak_live_bytes": paged["decode_memory"]["peak_live_bytes"],
         "gathered_view_bytes": paged["gathered_view_bytes"],
+        # tiered-KV preemption: host-DRAM swap vs recompute under pressure
+        # (an offload regression drags the aggregate ratio below the gate)
+        "swap_vs_recompute_speedup": pre["swap_vs_recompute_speedup"],
+        "preempt_tokens_identical": pre["preempt_tokens_identical"],
+        # advisory; -1 = swap never crossed over within the sweep (must stay
+        # numeric: _median_of medians this key across repeats)
+        "preempt_crossover_prompt_len": (
+            -1 if pre["crossover_prompt_len"] is None
+            else pre["crossover_prompt_len"]),
+        "swap_tok_s": pre["totals"]["swap"]["tok_s"],
+        "recompute_tok_s": pre["totals"]["recompute"]["tok_s"],
     }
 
 
@@ -62,12 +82,33 @@ def run_kernels() -> dict:
     return kernel_bench.bench_json()
 
 
-def _median_of(fn, repeats: int) -> dict:
-    """Per-key median over ``repeats`` runs — a single slow or fast outlier
-    run on a noisy shared runner must not swing a gated ratio."""
+def _one_run(which: str) -> dict:
+    return run_serve() if which == "serve" else run_kernels()
+
+
+def _median_of(which: str, repeats: int) -> dict:
+    """Per-key median over ``repeats`` runs, EACH IN A FRESH SUBPROCESS — a
+    single slow run on a noisy shared runner, or one process's unlucky XLA
+    compile, must not swing a gated ratio."""
     import statistics
 
-    runs = [fn() for _ in range(repeats)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src"), str(ROOT)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    runs = []
+    for _ in range(repeats):
+        proc = subprocess.run(
+            [sys.executable, str(pathlib.Path(__file__).resolve()),
+             "--emit", which],
+            capture_output=True, text=True, env=env,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"bench subprocess ({which}) failed:\n{proc.stderr[-2000:]}"
+            )
+        runs.append(json.loads(proc.stdout.splitlines()[-1]))
     out = dict(runs[0])
     for k, v in out.items():
         if isinstance(v, (int, float)) and not isinstance(v, bool):
@@ -103,16 +144,24 @@ def main(argv=None) -> int:
                       help="fail when a gated ratio regresses >20%")
     mode.add_argument("--update", action="store_true",
                       help="(re)write the committed baselines")
+    mode.add_argument("--emit", choices=["serve", "kernels"],
+                      help="internal: run one bench in this process and "
+                           "print its metrics JSON (the subprocess half of "
+                           "--repeats)")
     ap.add_argument("--repeats", type=int, default=3,
-                    help="runs per bench; the gate takes the median")
+                    help="fresh-subprocess runs per bench; the gate takes "
+                         "the per-key median")
     ap.add_argument("--out-serve", default="serve_gate.json",
                     help="where --check writes the current serve metrics")
     ap.add_argument("--out-kernels", default="kernels_gate.json")
     args = ap.parse_args(argv)
 
     sys.path.insert(0, str(ROOT))
-    serve = _median_of(run_serve, args.repeats)
-    kernels = _median_of(run_kernels, args.repeats)
+    if args.emit:
+        print(json.dumps(_one_run(args.emit)))
+        return 0
+    serve = _median_of("serve", args.repeats)
+    kernels = _median_of("kernels", args.repeats)
     import jax
 
     env = {"jax": jax.__version__, "python": platform.python_version(),
@@ -130,6 +179,8 @@ def main(argv=None) -> int:
     failures = []
     if not serve.get("paths_token_identical"):
         failures.append("serve: gather/paged token identity broken")
+    if not serve.get("preempt_tokens_identical"):
+        failures.append("serve: swap/recompute preemption token identity broken")
     failures += check(serve, json.loads(SERVE_BASELINE.read_text()),
                       GATED_SERVE, "serve")
     failures += check(kernels, json.loads(KERNEL_BASELINE.read_text()),

@@ -126,6 +126,68 @@ def bench_json() -> dict:
     out["attn.paged_decode.us"] = round(impl_us, 1)
     out["attn.paged_decode.oracle_ratio"] = oracle_us / impl_us
 
+    # SSD chunk scan (the production XLA dual form with the factorized
+    # decay — models/ssm.ssd_chunked) vs the exact sequential recurrence
+    # oracle (ref.ssd_scan); Mamba-2 decode/prefill hot path
+    from repro.configs.base import SSMConfig
+    from repro.models.ssm import ssd_chunked
+
+    class _SsdCfg:
+        ssm = SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=64)
+
+    hs, ps_, ns, ss = 8, 64, 64, 256
+    xh = jnp.asarray(rng.normal(size=(1, ss, hs, ps_)), jnp.float32)
+    bbn = jnp.asarray(rng.normal(size=(1, ss, ns)), jnp.float32)
+    ccn = jnp.asarray(rng.normal(size=(1, ss, ns)), jnp.float32)
+    dtn = jnp.asarray(rng.normal(size=(1, ss, hs)), jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(hs,)), jnp.float32)
+    d_skip = jnp.asarray(rng.normal(size=(hs,)), jnp.float32)
+    impl = jax.jit(lambda *a: ssd_chunked(_SsdCfg, *a)[0])
+    oracle = jax.jit(
+        lambda xx, bb_, cc_, dd: ref.ssd_scan(
+            xx, bb_, cc_, jax.nn.softplus(dd), -jnp.exp(a_log)
+        )
+    )
+    impl_us = _med_time(impl, xh, bbn, ccn, dtn, a_log, d_skip)
+    oracle_us = _med_time(oracle, xh, bbn, ccn, dtn)
+    out["ssd.chunked.us"] = round(impl_us, 1)
+    out["ssd.chunked.oracle_ratio"] = oracle_us / impl_us
+
+    # MoE grouped-einsum capacity dispatch (the GSPMD production form in
+    # models/moe) vs the dense every-token-through-every-expert oracle
+    from repro.models.moe import _dispatch_masks
+
+    g_, t_, e_, c_, d_, f_ = 1, 512, 8, 128, 128, 256
+    k_ = 2
+    xt = jnp.asarray(rng.normal(size=(g_, t_, d_)), jnp.float32)
+    router = jnp.asarray(rng.normal(size=(d_, e_)) * 0.1, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(e_, d_, f_)) * d_ ** -0.5, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(e_, f_, d_)) * f_ ** -0.5, jnp.float32)
+
+    def moe_impl(x, r, w1, w2):
+        gates = jax.nn.softmax(jnp.einsum("gtd,de->gte", x, r), axis=-1)
+        disp, comb = _dispatch_masks(gates, k_, c_)
+        xe = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), x)
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, w1))
+        ye = jnp.einsum("gecf,efd->gecd", h, w2)
+        return jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
+
+    def moe_oracle(x, r, w1, w2):
+        gates = jax.nn.softmax(jnp.einsum("gtd,de->gte", x, r), axis=-1)
+        topw, topi = jax.lax.top_k(gates, k_)
+        topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+        w = jnp.sum(jax.nn.one_hot(topi, e_) * topw[..., None], axis=2)
+        h = jax.nn.gelu(jnp.einsum("gtd,edf->gtef", x, w1))
+        ye = jnp.einsum("gtef,efd->gted", h, w2)
+        return jnp.einsum("gte,gted->gtd", w, ye)
+
+    impl = jax.jit(moe_impl)
+    oracle = jax.jit(moe_oracle)
+    impl_us = _med_time(impl, xt, router, wg, wd)
+    oracle_us = _med_time(oracle, xt, router, wg, wd)
+    out["moe.dispatch.us"] = round(impl_us, 1)
+    out["moe.dispatch.oracle_ratio"] = oracle_us / impl_us
+
     # matmul advisory absolute
     x = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
     out["matmul.512.us"] = round(_med_time(jax.jit(ref.tiled_matmul), x, x), 1)

@@ -21,6 +21,14 @@ dense gathered-view bytes the paged path never materializes.  ``both`` runs
 both and asserts token identity — a silent numeric break cannot pass the
 CI bench gate.
 
+The ``--preempt-policy`` axis measures the tiered-KV cache under memory
+pressure (a page pool sized to force preemption): ``swap`` moves victim
+pages to the host-DRAM tier and restores them on resume, ``recompute``
+re-prefills.  ``both`` sweeps prompt length, asserts token identity between
+the policies per length, and reports the recompute-vs-swap crossover (the
+shortest prompt length at which moving pages beats recomputing them) plus
+the aggregate ``swap_vs_recompute_speedup`` the CI bench gate checks.
+
 Run:   PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
 Smoke: PYTHONPATH=src python benchmarks/serve_bench.py --smoke   (tier-1 CI)
 """
@@ -241,6 +249,101 @@ def bench_pair(smoke: bool = False, seed: int = 0,
     return results
 
 
+def bench_preempt(smoke: bool = False, seed: int = 0,
+                  policies=("swap", "recompute"),
+                  size: str | None = None) -> dict:
+    """Swap-vs-recompute preemption under memory pressure, swept over prompt
+    length (the crossover axis: recomputation cost grows with tokens, swap
+    cost with pages).
+
+    Per prompt length the page pool is sized to admit every request but run
+    dry as decode grows (``lanes * reserve + 1`` pages), forcing the
+    preempt-longest-running policy to fire; each policy then serves an
+    identical workload.  ``swap`` engines run with ``swap_token_cost=0`` so
+    the sweep measures the pure mechanism (the shipped cost model blends the
+    two — its decisions are unit-tested, not benchmarked).  Token identity
+    between the policies is asserted per length.
+    """
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.models.common import AxisRules, DEFAULT_RULES
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    rules = AxisRules(DEFAULT_RULES)
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    size = size or ("smoke" if smoke else "full")
+    if size == "smoke":
+        plens, max_new, n, lanes, ps = (6, 14), 8, 3, 3, 4
+    elif size == "gate":
+        plens, max_new, n, lanes, ps = (8, 24, 48), 10, 4, 3, 4
+    else:
+        plens, max_new, n, lanes, ps = (8, 16, 32, 64, 96), 12, 6, 3, 8
+    max_len = -(-(max(plens) + max_new + 2) // 16) * 16
+
+    out = {"sweep": [], "workload": {
+        "prompt_lengths": list(plens), "max_new": max_new, "requests": n,
+        "lanes": lanes, "page_size": ps, "size": size,
+    }}
+    totals = {p: {"tokens": 0, "seconds": 0.0} for p in policies}
+    identical = True
+    for plen in plens:
+        reserve = -(-(plen + 1) // ps)
+        n_pages = lanes * reserve + 1          # admits all, dries mid-decode
+        row = {"prompt_len": plen, "n_pages": n_pages}
+        by_policy_tokens = {}
+        for policy in policies:
+            eng = ServeEngine(model, params, EngineConfig(
+                batch_slots=lanes, max_len=max_len, page_size=ps,
+                n_pages=n_pages, preempt_policy=policy,
+                swap_token_cost=0.0,
+            ), rules)
+            eng.submit(Request(uid=-1, prompt=np.arange(4, dtype=np.int32),
+                               max_new_tokens=2))
+            eng.run()                           # warm the jit caches
+            toks, dt, steps, step_s, by_uid = drive(eng, make_workload(
+                n, (plen,), max_new, mean_interarrival=1, seed=seed))
+            tel = eng.telemetry()
+            by_policy_tokens[policy] = by_uid
+            totals[policy]["tokens"] += toks
+            totals[policy]["seconds"] += dt
+            row[policy] = {
+                "tokens": toks, "seconds": dt, "tok_s": toks / dt,
+                "steps": steps, "step_latency_ms": _latency_ms(step_s),
+                "preemptions": tel["preemptions"],
+                "swap_preemptions": tel["swap_preemptions"],
+                "recompute_preemptions": tel["recompute_preemptions"],
+                "host_tier": tel.get("host_tier"),
+            }
+        if len(policies) == 2:
+            a, b = policies
+            if by_policy_tokens[a] != by_policy_tokens[b]:
+                identical = False
+            row["swap_vs_recompute"] = (row[b]["seconds"]
+                                        / row[a]["seconds"])
+        out["sweep"].append(row)
+    out["totals"] = {p: dict(t, tok_s=t["tokens"] / t["seconds"])
+                     for p, t in totals.items()}
+    if len(policies) == 2:
+        # the acceptance bar mirrors the decode-path one: the tiered cache
+        # must reproduce recompute-preemption token-for-token under pressure
+        assert identical, (
+            "swap/recompute preemption produced different tokens"
+        )
+        out["preempt_tokens_identical"] = True
+        out["swap_vs_recompute_speedup"] = (
+            totals["recompute"]["seconds"] / totals["swap"]["seconds"]
+        )
+        cross = [r["prompt_len"] for r in out["sweep"]
+                 if r.get("swap_vs_recompute", 0.0) >= 1.0]
+        out["crossover_prompt_len"] = cross[0] if cross else None
+    return out
+
+
 def bench():
     """CSV rows for benchmarks/run.py (small non-smoke run)."""
     r = bench_pair(smoke=True)
@@ -267,12 +370,23 @@ def main(argv=None):
                     default="both",
                     help="which paged-engine decode path(s) to drive; "
                          "'both' also asserts token identity")
+    ap.add_argument("--preempt-policy",
+                    choices=["swap", "recompute", "both", "none"],
+                    default="both",
+                    help="preemption-policy sweep under memory pressure; "
+                         "'both' asserts token identity and reports the "
+                         "recompute-vs-swap crossover; 'none' skips it")
     ap.add_argument("--out", default="serve_bench.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     results = bench_pair(smoke=args.smoke, seed=args.seed,
                          decode_path=args.decode_path)
+    if args.preempt_policy != "none":
+        policies = (("swap", "recompute") if args.preempt_policy == "both"
+                    else (args.preempt_policy,))
+        results["preempt"] = bench_preempt(smoke=args.smoke, seed=args.seed,
+                                           policies=policies)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, default=float)
     d = results["dense"]
@@ -291,6 +405,23 @@ def main(argv=None):
     if "paged_vs_gather_speedup" in results:
         print(f"paged vs gather: {results['paged_vs_gather_speedup']:.2f}x "
               "(tokens identical)")
+    if "preempt" in results:
+        pre = results["preempt"]
+        for row in pre["sweep"]:
+            parts = [f"plen {row['prompt_len']:3d} ({row['n_pages']} pages)"]
+            for pol in ("swap", "recompute"):
+                if pol in row:
+                    parts.append(f"{pol} {row[pol]['tok_s']:7.2f} tok/s "
+                                 f"({row[pol]['preemptions']} preempts)")
+            if "swap_vs_recompute" in row:
+                parts.append(f"ratio {row['swap_vs_recompute']:.2f}x")
+            print("preempt: " + "  ".join(parts))
+        if "swap_vs_recompute_speedup" in pre:
+            cross = pre["crossover_prompt_len"]
+            print(f"preempt: swap vs recompute {pre['swap_vs_recompute_speedup']:.2f}x "
+                  f"overall, crossover at plen "
+                  f"{cross if cross is not None else '>sweep'} "
+                  "(tokens identical)")
     print(f"speedup: {results['speedup']:.2f}x  -> {args.out}")
     return results
 

@@ -248,6 +248,22 @@ def paged_cache_axes(cfg, tree):
     return jax.tree_util.tree_map_with_path(leaf_axes, tree)
 
 
+def host_cache_axes(tree):
+    """All-``None`` logical axes for the host-DRAM swap tier
+    (``serve.host_tier.HostPagePool`` buffers): the host only coordinates —
+    its page copies are plain unsharded numpy, and a restored page is
+    replicated wherever ``device_put`` stages it back."""
+    return jax.tree.map(lambda x: (None,) * len(x.shape), tree)
+
+
+def host_tier_shardings(mesh, tree):
+    """Replicated ``NamedSharding`` tree for staging host-tier pages back
+    onto a mesh (``PagedKVCache(host_shardings=...)``).  Host-tier leaves
+    are never sharded: the swap link is host↔cube DMA, and the cube-serving
+    rules keep page pools whole per cube anyway (see ``cube_rules``)."""
+    return jax.tree.map(lambda _: replicated(mesh), tree)
+
+
 def cube_rules(mesh) -> AxisRules:
     """The cube-serving rule table (the serve router's entry point): batch
     over (cube, data); weights, caches, and page pools replicated per cube —

@@ -34,6 +34,16 @@ def main(argv=None):
     ap.add_argument("--policy", choices=["fcfs", "spf"], default="fcfs")
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--max-step-tokens", type=int, default=0)
+    ap.add_argument("--preempt-policy", choices=["swap", "recompute"],
+                    default="swap",
+                    help="eviction: swap pages to the host-DRAM tier and "
+                         "restore on resume, or free + recompute")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host-tier page pool size (0 = 2x device pool "
+                         "under --preempt-policy swap)")
+    ap.add_argument("--swap-cost", type=float, default=0.25,
+                    help="cost model: moving one token of KV relative to "
+                         "recomputing it (0 = always swap)")
     ap.add_argument("--cubes", type=int, default=1,
                     help="route over N cube-replica engines")
     ap.add_argument("--route", choices=["hash", "least_loaded"],
@@ -50,6 +60,9 @@ def main(argv=None):
         page_size=args.page_size, n_pages=args.pages or None,
         policy=args.policy, prefill_chunk=args.prefill_chunk,
         max_step_tokens=args.max_step_tokens,
+        preempt_policy=args.preempt_policy,
+        host_pages=args.host_pages or None,
+        swap_token_cost=args.swap_cost,
     )
     with set_mesh(mesh):
         if args.cubes > 1:

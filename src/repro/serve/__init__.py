@@ -6,6 +6,7 @@
 proven bit-exact against.
 """
 from .engine import EngineConfig, Request, ServeEngine          # noqa: F401
+from .host_tier import HostPagePool, SwapHandle                 # noqa: F401
 from .paged_cache import PageAllocator, PagedKVCache            # noqa: F401
 from .router import CubeRouter                                  # noqa: F401
 from .scheduler import Scheduler, SchedulerConfig               # noqa: F401

@@ -66,6 +66,17 @@ class EngineConfig:
     policy: str = "fcfs"            # fcfs | spf
     max_step_tokens: int = 0        # 0 = unbounded per-step token budget
     prefill_chunk: int = 0          # 0 = whole-prompt prefill
+    # preemption: 'swap' moves a victim's pages to a host-DRAM page pool and
+    # restores them on resume (no prefill re-runs; falls back to recompute
+    # when the host tier is exhausted or the cost model prefers it);
+    # 'recompute' frees the pages and re-prefills prompt + generated tokens
+    # (the v2 behavior, proven token-identical to 'swap')
+    preempt_policy: str = "swap"
+    host_pages: int | None = None   # host-tier size; None → 2x n_pages when
+    #                                 preempt_policy='swap', else 0 (no tier)
+    swap_token_cost: float = 0.25   # cost model: moving one token of KV
+    #                                 relative to recomputing it (0 ⇒ always
+    #                                 swap when host pages allow)
     # decode path: 'paged' hands block tables straight to the model
     # (decode_step_paged — the dense (B, max_len) gathered view is never
     # built); 'gather' is the materialize-then-decode fallback oracle the
@@ -108,6 +119,10 @@ class ServeEngine:
     def __init__(self, model, params, ecfg: EngineConfig, rules=None):
         if ecfg.decode_path not in ("paged", "gather"):
             raise ValueError(f"unknown decode_path: {ecfg.decode_path!r}")
+        if ecfg.preempt_policy not in ("swap", "recompute"):
+            raise ValueError(
+                f"unknown preempt_policy: {ecfg.preempt_policy!r}"
+            )
         model = stacked_decode_model(model)
         if ecfg.decode_path == "paged" and not hasattr(model,
                                                       "decode_step_paged"):
@@ -126,15 +141,21 @@ class ServeEngine:
             if ecfg.n_pages is not None
             else ecfg.batch_slots * -(-ecfg.max_len // ps)
         )
+        host_pages = ecfg.host_pages
+        if host_pages is None:
+            # host DRAM is the big tier: default to twice the device pool so
+            # swap preemption rarely hits the exhaustion fallback
+            host_pages = 2 * n_pages if ecfg.preempt_policy == "swap" else 0
         self.cache = PagedKVCache(
             model, lanes=ecfg.batch_slots, n_pages=n_pages, page_size=ps,
-            max_len=ecfg.max_len,
+            max_len=ecfg.max_len, host_pages=host_pages,
         )
         chunk = (ecfg.prefill_chunk
                  if getattr(model, "supports_chunked_prefill", False) else 0)
         self.sched = Scheduler(SchedulerConfig(
             policy=ecfg.policy, max_step_tokens=ecfg.max_step_tokens,
-            prefill_chunk=chunk,
+            prefill_chunk=chunk, preempt_policy=ecfg.preempt_policy,
+            swap_token_cost=ecfg.swap_token_cost,
         ))
         self.completed: list[Request] = []
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
@@ -271,6 +292,9 @@ class ServeEngine:
         st.req.done = True
         self.cache.allocator.free(st.pages)
         st.pages = []
+        if getattr(st, "swap_handle", None) is not None:
+            self.cache.host_free(st.swap_handle)
+            st.swap_handle = None
         if st.lane >= 0:
             self.cache.clear_lane(st.lane)
             self.sched.running.pop(st.lane, None)
@@ -420,5 +444,10 @@ class ServeEngine:
         st["queue_depth"] = self.sched.queue_depth()
         st["running"] = len(self.sched.running)
         st["preemptions"] = self.sched.n_preemptions
+        st["swap_preemptions"] = self.sched.n_swap_preemptions
+        st["recompute_preemptions"] = self.sched.n_recompute_preemptions
         st["page_occupancy"] = self.cache.occupancy()
+        st["host_page_occupancy"] = self.cache.host_occupancy()
+        if self.cache.host is not None:
+            st["host_tier"] = dict(self.cache.host.stats)
         return st

@@ -1,0 +1,184 @@
+"""Host-DRAM page tier behind the device page pools (KV-cache offload).
+
+The paper's memory hierarchy keeps data near compute ("the host only
+coordinates") — throwing a preempted request's KV pages away and
+*recomputing* them re-crosses the main-memory bottleneck PIM systems exist
+to avoid.  This module is the second tier that makes eviction a *move*
+instead: a pool of host-memory pages (plain numpy buffers, staged back with
+``jax.device_put``) keyed by the same block-table abstraction as the device
+pools, so the scheduler can swap a victim's pages out to host DRAM and
+restore them on resume without re-running prefill.
+
+Layout mirrors ``paged_cache``: every seq-carrying leaf
+``(layers, n_pages, PS, *tail)`` gets a host twin
+``(layers, n_host_pages, PS, *tail)``; recurrent-state leaves (SSD state,
+RG-LRU h, conv rings) have no pages — a swap captures the victim lane's
+state rows wholesale into the request's ``SwapHandle`` (they mutate every
+decode step, so they are always dirty).
+
+Dirty-page bookkeeping: decode appends — a page that was *full* at swap-out
+time can never change after resume, so its host copy stays valid.  The
+handle keeps the host pages across a resume and records the clean prefix;
+a second preemption of the same request copies only the pages written since
+(the partially-filled tail page and anything grown after it) plus the
+recurrent state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .paged_cache import PageAllocator, _is_seq
+
+
+@dataclass
+class SwapHandle:
+    """Per-request record of where its pages live in the host tier."""
+
+    host_pages: list[int] = field(default_factory=list)  # logical order
+    clean_pages: int = 0        # prefix whose host copy is still valid
+    length: int = 0             # kv tokens valid at last swap-out
+    state: object = None        # captured recurrent-state tree (numpy)
+
+
+class HostPagePool:
+    """Host-memory twin of the device seq-leaf pools + a free list.
+
+    Buffers are ordinary numpy arrays — host DRAM, never sharded (see
+    ``dist.sharding.host_cache_axes``); ``swap_in`` stages them back onto
+    the device with ``jax.device_put`` (optionally through a replicated
+    ``NamedSharding`` tree when serving on a mesh).
+    """
+
+    def __init__(self, device_pools, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.allocator = PageAllocator(n_pages)
+
+        def leaf(path, pool):
+            if not _is_seq(path):
+                # structure-preserving placeholder (state leaves ride the
+                # SwapHandle, not the host pool)
+                return np.zeros((), np.dtype(pool.dtype))
+            shape = (pool.shape[0], n_pages) + tuple(pool.shape[2:])
+            return np.zeros(shape, np.dtype(pool.dtype))
+
+        self.buffers = jax.tree_util.tree_map_with_path(leaf, device_pools)
+        self.stats = {
+            "swap_outs": 0, "swap_ins": 0,
+            "pages_out": 0, "pages_in": 0,
+            "bytes_out": 0, "bytes_in": 0,
+            "dirty_pages_skipped": 0,       # clean-prefix reuse
+            "exhausted_fallbacks": 0,       # host pool couldn't cover a swap
+        }
+
+    @property
+    def n_free(self) -> int:
+        return self.allocator.n_free
+
+    def occupancy(self) -> float:
+        return 1.0 - self.allocator.n_free / self.n_pages if self.n_pages else 0.0
+
+    # -- swap-out ----------------------------------------------------------
+
+    def swap_out(self, device_pools, device_pages: list[int], lane: int,
+                 length: int, handle: SwapHandle | None) -> SwapHandle | None:
+        """Copy a victim's device pages + its lane's recurrent state to the
+        host tier.  Returns the (possibly reused) handle, or None — with no
+        host allocation held — when the pool cannot cover the new pages
+        (the caller falls back to recompute-preemption)."""
+        n_logical = len(device_pages)
+        if handle is None:
+            handle = SwapHandle()
+        grow = n_logical - len(handle.host_pages)
+        if grow > 0:
+            got = self.allocator.alloc(grow)
+            if got is None:
+                self.stats["exhausted_fallbacks"] += 1
+                self.free(handle)
+                return None
+            handle.host_pages.extend(got)
+        dirty = list(range(handle.clean_pages, n_logical))
+        self.stats["dirty_pages_skipped"] += handle.clean_pages
+        if dirty:
+            dev_idx = jnp.asarray([device_pages[i] for i in dirty], jnp.int32)
+            host_idx = np.asarray([handle.host_pages[i] for i in dirty])
+
+            def copy(path, buf, pool):
+                if not _is_seq(path):
+                    return
+                chunk = np.asarray(jnp.take(pool, dev_idx, axis=1))
+                buf[:, host_idx] = chunk
+                self.stats["bytes_out"] += chunk.nbytes
+
+            jax.tree_util.tree_map_with_path(copy, self.buffers, device_pools)
+        # recurrent state rows are rewritten every decode step: always dirty
+        handle.state = self._capture_state(device_pools, lane)
+        handle.length = length
+        # pages full at swap time can never change after resume (decode
+        # appends) — they form the clean prefix for the next preemption
+        handle.clean_pages = min(length // self.page_size, n_logical)
+        self.stats["swap_outs"] += 1
+        self.stats["pages_out"] += len(dirty)
+        return handle
+
+    def _capture_state(self, device_pools, lane: int):
+        has_state = []
+
+        def leaf(path, pool):
+            if _is_seq(path):
+                return np.zeros((), np.dtype(pool.dtype))
+            has_state.append(1)
+            # (layers, 1, *tail): the shape write_state expects back
+            return np.asarray(pool[:, lane: lane + 1])
+
+        tree = jax.tree_util.tree_map_with_path(leaf, device_pools)
+        return tree if has_state else None
+
+    # -- swap-in -----------------------------------------------------------
+
+    def swap_in(self, device_pools, handle: SwapHandle,
+                device_pages: list[int], shardings=None):
+        """Restore every host page of ``handle`` into freshly allocated
+        ``device_pages`` (parallel order).  Host pages stay allocated — the
+        clean prefix is reused if the request is preempted again.  Returns
+        (new_device_pools, state_tree-or-None for ``write_state``)."""
+        assert len(device_pages) == len(handle.host_pages)
+        dev_idx = jnp.asarray(device_pages, jnp.int32)
+        host_idx = np.asarray(handle.host_pages)
+
+        def leaf(path, pool, buf, sh):
+            if not _is_seq(path):
+                return pool
+            chunk = buf[:, host_idx]
+            staged = (jax.device_put(chunk, sh) if sh is not None
+                      else jnp.asarray(chunk))
+            self.stats["bytes_in"] += chunk.nbytes
+            return pool.at[:, dev_idx].set(staged)
+
+        sh_tree = (shardings if shardings is not None
+                   else jax.tree.map(lambda _: None, device_pools))
+        pools = jax.tree_util.tree_map_with_path(
+            leaf, device_pools, self.buffers, sh_tree
+        )
+        self.stats["swap_ins"] += 1
+        self.stats["pages_in"] += len(device_pages)
+        state = (jax.tree.map(jnp.asarray, handle.state)
+                 if handle.state is not None else None)
+        return pools, state
+
+    def free(self, handle: SwapHandle | None) -> None:
+        """Release a request's host pages (retire, or recompute fallback
+        invalidating the copy)."""
+        if handle is None or not handle.host_pages:
+            return
+        self.allocator.free(handle.host_pages)
+        handle.host_pages = []
+        handle.clean_pages = 0
+        handle.state = None
+
+
+__all__ = ["HostPagePool", "SwapHandle"]

@@ -183,10 +183,18 @@ def scatter_lane_view(pools, pages: jax.Array, views, page_size: int):
 
 
 class PagedKVCache:
-    """Page pools + per-lane block tables + free list for one engine."""
+    """Page pools + per-lane block tables + free list for one engine.
+
+    ``host_pages > 0`` attaches a second storage tier (``host_tier.
+    HostPagePool``): host-DRAM twins of the seq-leaf pools that preemption
+    swaps victim pages out to instead of freeing them — see ``swap_out`` /
+    ``swap_in``.  ``host_shardings`` optionally carries a replicated
+    ``NamedSharding`` tree (``dist.sharding.host_tier_shardings``) for the
+    ``device_put`` staging on a mesh.
+    """
 
     def __init__(self, model, lanes: int, n_pages: int, page_size: int,
-                 max_len: int):
+                 max_len: int, host_pages: int = 0, host_shardings=None):
         if not hasattr(model, "cache_page_specs"):
             raise TypeError(
                 f"{type(model).__name__} has no paged-cache layout "
@@ -204,6 +212,12 @@ class PagedKVCache:
         )
         self.allocator = PageAllocator(n_pages)
         self.block_tables = np.full((lanes, self.pages_per_lane), -1, np.int32)
+        self.host = None
+        self.host_shardings = host_shardings
+        if host_pages:
+            from .host_tier import HostPagePool
+
+            self.host = HostPagePool(self.pools, host_pages, page_size)
 
     # -- host-side bookkeeping ---------------------------------------------
 
@@ -268,3 +282,30 @@ class PagedKVCache:
             self.pools,
         )
         return bool(found)
+
+    # -- host tier (swap-vs-recompute preemption) --------------------------
+
+    def swap_out(self, pages: list[int], lane: int, length: int,
+                 handle=None):
+        """Copy a victim's pages + lane state to the host tier.  Returns a
+        ``SwapHandle`` or None (host tier absent/exhausted — the caller
+        falls back to recompute-preemption, with no host pages held)."""
+        if self.host is None:
+            return None
+        return self.host.swap_out(self.pools, pages, lane, length, handle)
+
+    def swap_in(self, handle, pages: list[int]):
+        """Restore a swapped request into freshly allocated device ``pages``;
+        returns the captured recurrent-state tree (None for stateless
+        models) to be written once a lane is assigned."""
+        self.pools, state = self.host.swap_in(
+            self.pools, handle, pages, self.host_shardings
+        )
+        return state
+
+    def host_free(self, handle) -> None:
+        if self.host is not None:
+            self.host.free(handle)
+
+    def host_occupancy(self) -> float:
+        return self.host.occupancy() if self.host is not None else 0.0

@@ -1,22 +1,35 @@
 """Request scheduler for the paged serving engine.
 
-Pure host-side policy — no jax.  The engine asks the scheduler three
-questions each step: which waiting requests to admit (admission control
-against the free page pool + the per-step token budget), how large a prefill
+Host-side policy — the only jax it ever touches is through the cache's
+swap methods.  The engine asks the scheduler three questions each step:
+which waiting requests to admit (admission control against the free page
+pool + the per-step token budget; a *swapped-out* request is re-admitted by
+restoring its host-tier pages instead of prefilling), how large a prefill
 chunk each in-flight prefill may run this step (prefill chunking keeps one
 long prompt from monopolizing a step), and which running request to evict
 when the page pool runs dry (preempt-longest-running: the request with the
-most generated tokens has consumed the most pool and is the cheapest to
-recompute per token of progress lost).
+most generated tokens has consumed the most pool).
 
-Policies order the waiting queue only:
+Eviction itself is a policy (``SchedulerConfig.preempt_policy``):
+
+* ``swap``      — move the victim's pages to the host-DRAM tier and restore
+  them on resume (the paper's hierarchy: eviction is a *move* down the
+  memory hierarchy, not a recompute).  Per victim a cost model compares
+  pages-to-move against tokens-to-recompute (``swap_token_cost`` = cost of
+  moving one token of KV relative to recomputing it) and falls back to
+  recompute when recompute is cheaper or the host tier is exhausted.
+* ``recompute`` — free the pages and re-prefill prompt + generated tokens
+  on resume (the v2 behavior, kept as the proven-identical fallback).
+
+Queue-ordering policies order the waiting queue only:
 
 * ``fcfs`` — arrival order;
 * ``spf``  — shortest-prompt-first (a short prompt frees its lane soonest,
   the classic mean-latency win under mixed-length traffic).
 
 A preempted request re-enters at the *front* of the waiting queue whatever
-the policy — it already holds progress and starving it would livelock.
+the policy — it already holds progress (and possibly host pages) and
+starving it would livelock.
 """
 from __future__ import annotations
 
@@ -32,6 +45,10 @@ class SchedulerConfig:
     max_step_tokens: int = 0        # 0 = unbounded (prefill + decode per step)
     prefill_chunk: int = 0          # 0 = whole-prompt prefill
     max_inflight_prefills: int = 2  # prefills admitted but not yet decoding
+    preempt_policy: str = "swap"    # swap | recompute
+    # cost of moving one token of KV through the host tier relative to
+    # recomputing it (the swap-vs-recompute cost model; 0 = always swap)
+    swap_token_cost: float = 0.25
 
 
 @dataclass
@@ -50,6 +67,9 @@ class RequestState:
     last_logits: object = None      # final prefill logits (one vocab row)
     state_cache: object = None      # held recurrent state until a lane frees
     extend_state: object = None     # chunked-prefill carried SSD/RG-LRU state
+    swapped: bool = False           # pages live in the host tier
+    swap_handle: object = None      # host_tier.SwapHandle (survives resume:
+    #                                 its clean prefix skips recopies)
 
     @property
     def remaining_prefill(self) -> int:
@@ -63,12 +83,19 @@ class Scheduler:
     def __init__(self, cfg: SchedulerConfig):
         if cfg.policy not in ("fcfs", "spf"):
             raise ValueError(f"unknown scheduler policy: {cfg.policy!r}")
+        if cfg.preempt_policy not in ("swap", "recompute"):
+            raise ValueError(
+                f"unknown preempt policy: {cfg.preempt_policy!r}"
+            )
         self.cfg = cfg
         self.waiting: list[RequestState] = []
         self.prefilling: list[RequestState] = []
         self.ready: list[RequestState] = []
         self.running: dict[int, RequestState] = {}     # lane → state
         self.n_preemptions = 0
+        self.n_swap_preemptions = 0
+        self.n_recompute_preemptions = 0
+        self.preemptions_by_uid: dict[int, int] = {}
 
     # -- queue accounting ---------------------------------------------------
 
@@ -97,15 +124,40 @@ class Scheduler:
     def admissions(self, cache, budget: int) -> list[RequestState]:
         """Move waiting→prefilling while pages, budget, and the in-flight
         bound allow; pages for the whole prompt (+1 decode slot) are
-        reserved up front so an admitted prefill can always finish."""
+        reserved up front so an admitted prefill can always finish.
+
+        A swapped-out request is re-admitted by restoring its host-tier
+        pages into fresh device pages (``cache.swap_in``) and goes straight
+        to the ready queue — no prefill runs, and no prefill budget is
+        consumed (the restore is a DMA, not compute)."""
         admitted = []
         while (self.waiting and budget > 0
                and len(self.prefilling) + len(self.ready)
                < self.cfg.max_inflight_prefills):
-            nxt_i = (int(np.argmin([len(s.resume_tokens)
-                                    for s in self.waiting]))
-                     if self.cfg.policy == "spf" else 0)
-            need = len(self.waiting[nxt_i].resume_tokens) + 1
+            # swapped requests resume first whatever the ordering policy:
+            # they sit at the queue front, hold host pages, and starving
+            # them would pin the host tier
+            swapped = [i for i, s in enumerate(self.waiting) if s.swapped]
+            if swapped:
+                nxt_i = swapped[0]
+            elif self.cfg.policy == "spf":
+                nxt_i = int(np.argmin([len(s.resume_tokens)
+                                       for s in self.waiting]))
+            else:
+                nxt_i = 0
+            nxt = self.waiting[nxt_i]
+            if nxt.swapped:
+                pages = cache.allocator.alloc(len(nxt.swap_handle.host_pages))
+                if pages is None:
+                    break
+                st = self.waiting.pop(nxt_i)
+                st.pages = pages
+                st.state_cache = cache.swap_in(st.swap_handle, pages)
+                st.swapped = False
+                self.ready.append(st)
+                admitted.append(st)
+                continue
+            need = len(nxt.resume_tokens) + 1
             pages = cache.alloc(need)
             if pages is None:
                 break
@@ -134,22 +186,64 @@ class Scheduler:
             return None
         return max(cands, key=lambda s: len(s.req.out_tokens))
 
-    def preempt(self, st: RequestState, cache) -> None:
-        """Evict: free pages + lane, queue for recompute-resume at the front
-        (re-prefills prompt + generated-so-far; greedy decode then reproduces
-        the identical continuation)."""
+    def swap_beats_recompute(self, st: RequestState, cache) -> bool:
+        """The eviction cost model: pages-to-move vs tokens-to-recompute.
+
+        Swapping moves the dirty pages out now plus every page back in on
+        resume; recomputing re-runs prefill over prompt + generated tokens.
+        Both are priced in token units — ``swap_token_cost`` is the relative
+        cost of moving one page-slot of KV (0 ⇒ swap always wins).
+        """
+        clean = st.swap_handle.clean_pages if st.swap_handle else 0
+        pages_to_move = (len(st.pages) - clean) + len(st.pages)   # out + in
+        swap_cost = pages_to_move * cache.page_size * self.cfg.swap_token_cost
+        recompute_tokens = len(st.req.prompt) + len(st.req.out_tokens) - 1
+        return swap_cost < recompute_tokens
+
+    def preempt(self, st: RequestState, cache) -> str:
+        """Evict ``st`` from its lane, by the configured policy.
+
+        ``swap``: move its pages to the host tier (cost model permitting and
+        host pages available) and queue it for a restore-resume — length,
+        pending token, and recurrent state all survive, so no prefill
+        re-runs.  Otherwise (policy ``recompute``, cost model says moving is
+        dearer, or host tier exhausted): free the pages and queue for
+        recompute-resume at the front (re-prefills prompt + generated-so-
+        far; greedy decode then reproduces the identical continuation).
+        Returns the mode that actually happened: 'swap' | 'recompute'.
+        """
+        mode = "recompute"
+        if (self.cfg.preempt_policy == "swap"
+                and self.swap_beats_recompute(st, cache)):
+            handle = cache.swap_out(st.pages, st.lane, st.length,
+                                    st.swap_handle)
+            if handle is not None:
+                st.swap_handle = handle
+                mode = "swap"
         cache.allocator.free(st.pages)
         cache.clear_lane(st.lane)
         del self.running[st.lane]
         st.pages = []
         st.lane = -1
-        st.resume_tokens = np.concatenate([
-            np.asarray(st.req.prompt, np.int32),
-            np.asarray(st.req.out_tokens[:-1], np.int32),
-        ])
-        st.prefilled = 0
-        st.length = 0
-        st.is_resume = True
+        if mode == "swap":
+            st.swapped = True               # length/pending_token survive
+            self.n_swap_preemptions += 1
+        else:
+            # the host copy (if any) is invalidated by re-prefill
+            cache.host_free(st.swap_handle)
+            st.swap_handle = None
+            st.swapped = False
+            st.resume_tokens = np.concatenate([
+                np.asarray(st.req.prompt, np.int32),
+                np.asarray(st.req.out_tokens[:-1], np.int32),
+            ])
+            st.prefilled = 0
+            st.length = 0
+            st.is_resume = True
+            self.n_recompute_preemptions += 1
         st.preemptions += 1
         self.n_preemptions += 1
+        uid = st.req.uid
+        self.preemptions_by_uid[uid] = self.preemptions_by_uid.get(uid, 0) + 1
         self.waiting.insert(0, st)
+        return mode

@@ -596,3 +596,14 @@ def test_serve_bench_smoke(tmp_path):
         # materializes the dense view the gather path allocates
         assert (report["decode_paths"]["paged"]["decode_memory"]["peak_live_bytes"]
                 <= report["decode_paths"]["gather"]["decode_memory"]["peak_live_bytes"])
+    # the preemption-policy sweep rode along: swap/recompute identity held
+    # under forced memory pressure and the crossover metric is present
+    pre = report["preempt"]
+    assert pre["preempt_tokens_identical"] is True
+    assert pre["swap_vs_recompute_speedup"] > 0
+    assert "crossover_prompt_len" in pre
+    for row in pre["sweep"]:
+        assert row["swap"]["preemptions"] > 0
+        assert row["recompute"]["preemptions"] > 0
+        assert row["swap"]["swap_preemptions"] > 0
+        assert row["recompute"]["swap_preemptions"] == 0
