@@ -29,6 +29,18 @@ the policies per length, and reports the recompute-vs-swap crossover (the
 shortest prompt length at which moving pages beats recomputing them) plus
 the aggregate ``swap_vs_recompute_speedup`` the CI bench gate checks.
 
+The ``--async-prefill`` axis drives an admission *storm* (a new arrival
+nearly every step) through the two-loop engine with the admission pipeline
+on its worker thread (``on``) vs inline (``off``): prefill chunks and
+swap-in DMA overlap decode in the first case and serialize with it in the
+second.  ``both`` asserts token identity (the pipeline owns no shared
+device state, so threading it must not change a single token — also
+asserted per model family on the full run) and reports
+``async_vs_sync_tokens_per_s`` plus each mode's decode-lane idle fraction.
+The swap-out *batching* microbench rides along: one device→host copy per
+cache leaf for a whole victim set vs the per-victim copies it replaced
+(``swap_out_batch_speedup``, also CI-gated).
+
 Run:   PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
 Smoke: PYTHONPATH=src python benchmarks/serve_bench.py --smoke   (tier-1 CI)
 """
@@ -80,6 +92,8 @@ def drive(engine, workload):
         step_s.append(time.perf_counter() - ts)
         step += 1
     dt = time.perf_counter() - t0
+    if hasattr(engine, "pipeline"):
+        engine.pipeline.shutdown()      # park the admission worker
     tokens = sum(len(r.out_tokens) for r in live)
     assert all(r.done for r in live), "bench drained with unfinished requests"
     out = {r.uid: list(r.out_tokens) for r in live}
@@ -344,6 +358,220 @@ def bench_preempt(smoke: bool = False, seed: int = 0,
     return out
 
 
+ASYNC_FAMILIES = ["qwen2.5-3b", "deepseek-v3-671b", "mamba2-130m",
+                  "recurrentgemma-9b"]
+
+
+def bench_async(smoke: bool = False, seed: int = 0,
+                modes=("on", "off"), size: str | None = None) -> dict:
+    """Admission-pipeline overlap under an arrival storm: ``on`` runs
+    prefill chunks + swap-in staging on the worker thread beside the decode
+    loop, ``off`` runs the identical pipeline inline per step.
+
+    The storm workload admits a new request nearly every step (Poisson with
+    mean interarrival 1 on the step clock), so the sync engine serializes a
+    prefill chunk in front of almost every decode step while the async
+    engine overlaps them — the paper's DMA-double-buffering discipline
+    transplanted to serving.  Both modes must produce bit-identical tokens
+    (asserted; additionally per model family on the full run — the pipeline
+    owns no shared device state, so *when* it runs can never change *what*
+    it computes).
+
+    Honest measurement note: the overlap win requires prefill compute to
+    run somewhere decode isn't.  On a few-core CPU host the XLA CPU
+    client's async-dispatch queue serializes all executions (measured: a
+    two-thread decode+extend overlap runs 1.03x serial with it, 1.62x with
+    ``JAX_CPU_ENABLE_ASYNC_DISPATCH=0``), so the gated ratio on such hosts
+    sits near or below 1.0 and the gate guards it against *regression*;
+    per-step decode latency (also reported) is what the pipeline improves
+    everywhere.  On a real accelerator — decode on device, admissions on
+    host — the ratio is the point of the architecture.
+    """
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.models.common import AxisRules, DEFAULT_RULES
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    rules = AxisRules(DEFAULT_RULES)
+    size = size or ("smoke" if smoke else "full")
+    # admission-HEAVY on purpose: long prompts, short generations, an
+    # arrival nearly every step — the regime where the sync engine stalls
+    # decode behind a prefill chunk almost every round.  (Decode-dominated
+    # traffic measures near 1.0 here instead: prefill compute then contends
+    # with decode for the same few CPU cores — see the docstring note.)
+    if size == "smoke":
+        lengths, max_new, n, lanes, max_len, chunk = (8, 16), 6, 6, 3, 64, 8
+        families = ["mamba2-130m"]      # storm covers qwen; add a recurrent
+    elif size == "gate":
+        lengths, max_new, n, lanes, max_len, chunk = (16, 32), 8, 32, 3, 96, 8
+        families = []                   # the gate measures the ratio only
+    else:
+        lengths, max_new, n, lanes, max_len, chunk = ((16, 32, 48), 8, 40, 3,
+                                                      160, 8)
+        families = ASYNC_FAMILIES       # the acceptance bar: all 4 families
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def build(async_on: bool, a_cfg=cfg, a_model=None, a_params=None,
+              a_lanes=None, a_max_len=None, a_chunk=None):
+        eng = ServeEngine(
+            a_model or model, a_params if a_params is not None else params,
+            EngineConfig(batch_slots=a_lanes or lanes,
+                         max_len=a_max_len or max_len,
+                         prefill_chunk=chunk if a_chunk is None else a_chunk,
+                         async_prefill=async_on), rules,
+        )
+        # warm every prefill-chunk jit signature the storm will hit, so the
+        # measured ratio is overlap, not one mode eating more compiles
+        for i, plen in enumerate(lengths if a_chunk is None else (4,)):
+            eng.submit(Request(uid=-1 - i,
+                               prompt=np.arange(plen, dtype=np.int32),
+                               max_new_tokens=2))
+        eng.run()
+        for k in eng.stats:          # drop warmup from the reported stats
+            eng.stats[k] = type(eng.stats[k])()
+        return eng
+
+    out = {"workload": {
+        "requests": n, "prompt_lengths": list(lengths), "max_new": max_new,
+        "lanes": lanes, "prefill_chunk": chunk, "size": size,
+        "mean_interarrival": 1,
+    }, "modes": {}}
+    by_mode_tokens = {}
+    # interleave repeated drives of the two modes and median per mode: on a
+    # shared/few-core host the absolute tok/s drifts ~2x over seconds
+    # (thread-pool and frequency state), and a gated RATIO of two
+    # single-shot runs inherits all of it — alternation decorrelates the
+    # drift, the median discards the outliers
+    reps = 2 if size == "smoke" else 3
+    engines = {mode: build(mode == "on") for mode in modes}
+    runs = {mode: [] for mode in modes}
+    for rep in range(reps):
+        for mode in modes:
+            eng = engines[mode]
+            for k in eng.stats:
+                eng.stats[k] = type(eng.stats[k])()
+            toks, dt, steps, step_s, by_uid = drive(eng, make_workload(
+                n, lengths, max_new, mean_interarrival=1, seed=seed))
+            tel = eng.telemetry()
+            if rep == 0:
+                by_mode_tokens[mode] = by_uid
+            else:
+                # reruns of the same workload must reproduce themselves
+                assert by_uid == by_mode_tokens[mode], (
+                    f"non-deterministic tokens across reruns ({mode})")
+            runs[mode].append({
+                "tokens": toks, "seconds": dt, "tok_s": toks / dt,
+                "steps": steps, "step_latency_ms": _latency_ms(step_s),
+                "decode_idle_fraction": tel["decode_idle_fraction"],
+                "lane_utilization": tel["lane_utilization"],
+                "prefill_tokens": tel["prefill_tokens"],
+                "pipeline": tel["pipeline"],
+            })
+    for mode in modes:
+        rows = sorted(runs[mode], key=lambda r: r["tok_s"])
+        med = rows[len(rows) // 2]
+        med["tok_s_runs"] = [r["tok_s"] for r in runs[mode]]
+        out["modes"][mode] = med
+    if len(modes) == 2:
+        # the acceptance bar: threading the admission pipeline must not
+        # change a single token — a silent divergence cannot pass CI
+        assert by_mode_tokens["on"] == by_mode_tokens["off"], (
+            "async/sync admission pipeline produced different tokens"
+        )
+        out["tokens_identical"] = True
+        out["async_vs_sync_tokens_per_s"] = (
+            out["modes"]["on"]["tok_s"] / out["modes"]["off"]["tok_s"]
+        )
+
+    fam_rows = {}
+    for arch in families:
+        fcfg = get_arch(arch).reduced()
+        import dataclasses as _dc
+
+        fmodel = build_model(_dc.replace(fcfg, decode_unroll_layers=False))
+        fparams = fmodel.init(jax.random.key(0))
+        fam_tokens = {}
+        for mode in ("on", "off"):
+            eng = build(mode == "on", a_model=fmodel, a_params=fparams,
+                        a_lanes=2, a_max_len=64, a_chunk=4)
+            _, _, _, _, by_uid = drive(eng, make_workload(
+                4, (6, 11), max_new, mean_interarrival=1, seed=seed))
+            fam_tokens[mode] = by_uid
+        assert fam_tokens["on"] == fam_tokens["off"], (
+            f"async/sync tokens diverged on {arch}"
+        )
+        fam_rows[arch] = {"tokens_identical": True}
+    if fam_rows:
+        out["families"] = fam_rows
+    return out
+
+
+def bench_swap_batch(seed: int = 0, n_victims: int = 6, pages_each: int = 4,
+                     reps: int = 5) -> dict:
+    """Swap-out batching microbench: evicting a victim set with one
+    device→host copy per cache leaf (``HostPagePool.commit_many``) vs the
+    per-victim ``swap_out`` round-trips it replaced.  Pure copy timing on
+    real qwen-reduced pool layouts — the ratio the CI gate checks as
+    ``swap_out_batch_speedup``."""
+    import time as _time
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve.paged_cache import PagedKVCache
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    n_pages = n_victims * pages_each + 2
+    cache = PagedKVCache(model, lanes=n_victims, n_pages=n_pages,
+                         page_size=16, max_len=pages_each * 16,
+                         host_pages=2 * n_pages)
+    victims = []
+    for lane in range(n_victims):
+        pages = cache.allocator.alloc(pages_each)
+        cache.assign_lane(lane, pages)
+        victims.append((pages, lane, pages_each * 16 - 3))
+    host = cache.host
+
+    def run_per_victim():
+        t0 = _time.perf_counter()
+        handles = [host.swap_out(cache.pools, pages, lane, length)
+                   for pages, lane, length in victims]
+        dt = _time.perf_counter() - t0
+        for h in handles:
+            host.free(h)
+        return dt
+
+    def run_batched():
+        t0 = _time.perf_counter()
+        items = []
+        for pages, lane, length in victims:
+            handle, dirty = host.reserve(None, len(pages))
+            items.append((handle, list(pages), dirty, lane, length))
+        host.commit_many(cache.pools, items)
+        dt = _time.perf_counter() - t0
+        for handle, *_ in items:
+            host.free(handle)
+        return dt
+
+    run_per_victim(), run_batched()            # warm dispatch paths
+    per_victim = [run_per_victim() for _ in range(reps)]
+    batched = [run_batched() for _ in range(reps)]
+    pv, bt = float(np.median(per_victim)), float(np.median(batched))
+    return {
+        "n_victims": n_victims, "pages_each": pages_each, "reps": reps,
+        "per_victim_s": pv, "batched_s": bt,
+        "device_gets_per_victim_sweep": n_victims,     # one per victim before
+        "speedup": pv / bt,
+    }
+
+
 def bench():
     """CSV rows for benchmarks/run.py (small non-smoke run)."""
     r = bench_pair(smoke=True)
@@ -376,6 +604,12 @@ def main(argv=None):
                     help="preemption-policy sweep under memory pressure; "
                          "'both' asserts token identity and reports the "
                          "recompute-vs-swap crossover; 'none' skips it")
+    ap.add_argument("--async-prefill", choices=["on", "off", "both", "none"],
+                    default="both",
+                    help="admission-pipeline storm: worker-thread vs inline "
+                         "prefill/swap-in; 'both' asserts token identity "
+                         "and reports async_vs_sync_tokens_per_s; 'none' "
+                         "skips it")
     ap.add_argument("--out", default="serve_bench.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -387,6 +621,12 @@ def main(argv=None):
                     else (args.preempt_policy,))
         results["preempt"] = bench_preempt(smoke=args.smoke, seed=args.seed,
                                            policies=policies)
+    if args.async_prefill != "none":
+        modes = (("on", "off") if args.async_prefill == "both"
+                 else (args.async_prefill,))
+        results["async"] = bench_async(smoke=args.smoke, seed=args.seed,
+                                       modes=modes)
+        results["swap_batch"] = bench_swap_batch(seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, default=float)
     d = results["dense"]
@@ -422,6 +662,20 @@ def main(argv=None):
                   f"overall, crossover at plen "
                   f"{cross if cross is not None else '>sweep'} "
                   "(tokens identical)")
+    if "async" in results:
+        a = results["async"]
+        for mode, row in a["modes"].items():
+            print(f"async={mode:3s}: {row['tok_s']:8.2f} tok/s  "
+                  f"(decode idle {row['decode_idle_fraction']:.2f}, "
+                  f"step p50 {row['step_latency_ms']['p50']:.2f} ms)")
+        if "async_vs_sync_tokens_per_s" in a:
+            fams = ", ".join(a.get("families", {})) or "storm arch"
+            print(f"async vs sync: {a['async_vs_sync_tokens_per_s']:.2f}x "
+                  f"(tokens identical on {fams})")
+        sb = results["swap_batch"]
+        print(f"swap-out batching: {sb['speedup']:.2f}x "
+              f"({sb['n_victims']} victims x {sb['pages_each']} pages, "
+              f"one device_get per leaf vs one per victim)")
     print(f"speedup: {results['speedup']:.2f}x  -> {args.out}")
     return results
 

@@ -34,6 +34,15 @@ def main(argv=None):
     ap.add_argument("--policy", choices=["fcfs", "spf"], default="fcfs")
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--max-step-tokens", type=int, default=0)
+    ap.add_argument("--async-prefill", choices=["on", "off"], default="on",
+                    help="run prefill chunks + swap-in staging on the "
+                         "admission pipeline thread (on, default) or "
+                         "inline per step (off — the debugging fallback; "
+                         "bit-identical tokens either way)")
+    ap.add_argument("--admission-inflight", type=int, default=2,
+                    help="backpressure: admissions in flight (pages "
+                         "reserved, not yet decoding) before the pipeline "
+                         "stops admitting")
     ap.add_argument("--preempt-policy", choices=["swap", "recompute"],
                     default="swap",
                     help="eviction: swap pages to the host-DRAM tier and "
@@ -60,6 +69,8 @@ def main(argv=None):
         page_size=args.page_size, n_pages=args.pages or None,
         policy=args.policy, prefill_chunk=args.prefill_chunk,
         max_step_tokens=args.max_step_tokens,
+        async_prefill=args.async_prefill == "on",
+        admission_inflight=args.admission_inflight,
         preempt_policy=args.preempt_policy,
         host_pages=args.host_pages or None,
         swap_token_cost=args.swap_cost,

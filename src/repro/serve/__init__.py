@@ -5,6 +5,7 @@
 ``dense_engine.DenseSlotEngine`` is the v1 reference the paged engine is
 proven bit-exact against.
 """
+from .admission import AdmissionPipeline                        # noqa: F401
 from .engine import EngineConfig, Request, ServeEngine          # noqa: F401
 from .host_tier import HostPagePool, SwapHandle                 # noqa: F401
 from .paged_cache import PageAllocator, PagedKVCache            # noqa: F401

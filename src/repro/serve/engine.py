@@ -1,23 +1,27 @@
-"""Paged continuous-batching serving engine (serve v2).
+"""Paged continuous-batching serving engine (serve v2), two-loop form.
 
 The v1 engine was a fixed-slot array over a dense ``batch_slots x max_len``
-cache; this engine is a thin step loop over three parts the paper's
-SMC-network serving pattern maps onto directly:
+cache; v2 made the cache paged and the scheduler explicit.  This revision
+splits the single host loop in two, the way the paper's NeuroCluster splits
+DMA from compute (double-buffering keeps the NeuroStreams fed — the host
+never serializes data movement with streaming):
 
-* ``paged_cache.PagedKVCache`` — KV state lives in fixed-size pages handed
-  out by a free list (near-memory vault pages), so a short request costs
-  pages proportional to its length, not ``max_len``;
-* ``scheduler.Scheduler`` — admission control, prefill chunking, FCFS /
-  shortest-prompt-first ordering, and preempt-longest-running when the pool
-  runs dry (the host only coordinates — it never touches the stream);
-* the model's ``decode_step_paged`` over the page pools themselves with
-  *per-lane* positions — the model reads/writes pages through the block
-  table, so the dense ``(B, max_len, ...)`` gathered view is never
-  materialized (the paper's never-copy-to-host streaming discipline), and
-  lanes advance independently (true continuous batching), unlike v1's
-  shared-max-position stepping which attended zero padding on ragged
-  batches.  ``EngineConfig.decode_path='gather'`` keeps the old
-  materialize-then-decode path as the bit-exactness oracle.
+* the **decode loop** (``step``/``run``, the caller's thread) owns the page
+  pools and block tables exclusively: lane assignment, page growth,
+  batched preemption (one device→host copy per leaf for the whole victim
+  set), and the batched decode step;
+* the **admission pipeline** (``serve.admission.AdmissionPipeline``) runs
+  prefill chunks and host-tier swap-in staging — the serve loop's data
+  movement — on a worker thread (``EngineConfig.async_prefill``, default
+  on) or inline as a sync fallback, computing into *private* per-request
+  buffers and handing finished requests to the decode loop through the
+  scheduler's ready queue.
+
+Shared bookkeeping (queues, free lists, stats) lives under one engine lock;
+jax compute never runs inside it.  Both pipeline modes are bit-identical:
+the pipeline never touches the pools, so moving it across threads moves
+*when* work happens, never *what* it computes — asserted engine-wide by the
+``--async-prefill both`` bench axis and the thread-stress tests.
 
 The greedy/temperature sampling API (``Request``, ``submit``, ``step``,
 ``run``) is unchanged from v1; the dense engine survives as
@@ -26,20 +30,19 @@ The greedy/temperature sampling API (``Request``, ``submit``, ``step``,
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .admission import AdmissionPipeline, prefill_logits_token
 from .paged_cache import (
     PagedKVCache,
     absorb_decode,
-    gather_lane_view,
     gather_views,
-    merge_lane_state,
-    scatter_lane_view,
-    strip_seq_leaves,
 )
 from .scheduler import Scheduler, SchedulerConfig
 
@@ -64,8 +67,22 @@ class EngineConfig:
     n_pages: int | None = None      # None → batch_slots * max_len / page_size
     # scheduler
     policy: str = "fcfs"            # fcfs | spf
-    max_step_tokens: int = 0        # 0 = unbounded per-step token budget
+    # per-step token budget (decode + prefill), 0 = unbounded.  Paces the
+    # SYNC pipeline's inline prefill work; in async mode prefill runs on
+    # the worker's own clock, so the budget bounds decode lanes only and
+    # pipeline pacing comes from admission_inflight
+    max_step_tokens: int = 0
     prefill_chunk: int = 0          # 0 = whole-prompt prefill
+    # admission pipeline: True runs prefill chunks + swap-in staging on a
+    # worker thread feeding the ready queue (decode lanes never stall on an
+    # arrival or a restore); False runs the identical pipeline inline each
+    # step — the debugging fallback and the bench baseline.  Bit-identical
+    # tokens either way (the pipeline owns no shared device state)
+    async_prefill: bool = True
+    # backpressure: prefills/restores admitted (pages reserved, private
+    # buffers held) but not yet decoding.  Bounds the pipeline's page +
+    # memory footprint; raise it to keep a deep ready queue under storms
+    admission_inflight: int = 2
     # preemption: 'swap' moves a victim's pages to a host-DRAM page pool and
     # restores them on resume (no prefill re-runs; falls back to recompute
     # when the host tier is exhausted or the cost model prefers it);
@@ -114,7 +131,7 @@ def stacked_decode_model(model):
 
 class ServeEngine:
     """Greedy/temperature sampling over the DecoderLM serving API, backed by
-    a paged KV cache and a request scheduler."""
+    a paged KV cache, a request scheduler, and an admission pipeline."""
 
     def __init__(self, model, params, ecfg: EngineConfig, rules=None):
         if ecfg.decode_path not in ("paged", "gather"):
@@ -156,10 +173,24 @@ class ServeEngine:
             policy=ecfg.policy, max_step_tokens=ecfg.max_step_tokens,
             prefill_chunk=chunk, preempt_policy=ecfg.preempt_policy,
             swap_token_cost=ecfg.swap_token_cost,
+            max_inflight_prefills=ecfg.admission_inflight,
         ))
         self.completed: list[Request] = []
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                      "occupancy_sum": 0.0, "occupancy_max": 0.0}
+                      "occupancy_sum": 0.0, "occupancy_max": 0.0,
+                      # decode-lane utilization: active lanes vs capacity,
+                      # summed per step — 1 - lane/slot is the idle fraction
+                      # the async pipeline exists to shrink
+                      "lane_step_sum": 0, "lane_slot_sum": 0}
+        # ONE bookkeeping lock (queues, free lists, stats) shared by the
+        # decode loop and the admission pipeline; jax compute never runs
+        # under it.  The condition variable signals hand-offs both ways
+        # (ready-queue push, page free, submit) so neither loop spins.
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self.pipeline = AdmissionPipeline(self, ecfg.async_prefill)
+        self._idle_since: float | None = None
+        self._idle_pipe_mark = -1
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._extend = jax.jit(self._extend_impl, donate_argnums=(1,))
         # whole-prompt prefill, jit-cached per prompt length (the dense v1
@@ -167,6 +198,12 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda params, toks: self.model.prefill(params, toks, self.rules)
         )
+
+    def __del__(self):
+        try:
+            self.pipeline.shutdown()
+        except Exception:
+            pass
 
     # -- jitted pieces --------------------------------------------------------
 
@@ -189,21 +226,11 @@ class ServeEngine:
             attn_impl=self.ecfg.attn_impl,
         )
 
-    def _extend_impl(self, params, pools, state, pages, tokens, start):
-        views = gather_lane_view(pools, pages)
-        if state is not None:
-            # recurrent-state leaves ride per request, not in the pools
-            views = merge_lane_state(views, state)
-        logits, new_views = self.model.extend_step(
-            params, views, tokens, start, self.rules
-        )
-        pools = scatter_lane_view(pools, pages, new_views,
-                                  self.cache.page_size)
-        # carry only the recurrent-state leaves forward (seq leaves are
-        # already scattered into the pages; holding them would pin a whole
-        # dense lane of KV per in-flight prefill)
-        new_state = strip_seq_leaves(new_views) if state is not None else None
-        return logits, pools, new_state
+    def _extend_impl(self, params, tree, tokens, start):
+        # one chunked-prefill step over a request's PRIVATE cache tree —
+        # the pipeline may run this on its thread while the decode loop
+        # steps the pools, because they share no device buffers
+        return self.model.extend_step(params, tree, tokens, start, self.rules)
 
     # -- request handling ------------------------------------------------------
 
@@ -218,111 +245,196 @@ class ServeEngine:
             raise ValueError(
                 f"prompt needs {need} pages, pool has {self.cache.n_pages}"
             )
-        self.sched.add(req)
+        with self._lock:
+            self.sched.add(req)
+            self._cv.notify_all()
+        self.pipeline.kick()
 
-    # -- prefill ---------------------------------------------------------------
+    # -- prefill (called by the admission pipeline, OUTSIDE the lock) ---------
 
-    def _fresh_extend_state(self):
-        """Zero single-request state tree seeding a chunked prefill's
-        recurrent state (None for models without state leaves; seq leaves
-        are scalar placeholders — see ``strip_seq_leaves``)."""
-        if not self.cache.has_state_leaves():
-            return None
-        return strip_seq_leaves(jax.tree.map(
+    def _fresh_prefill_tree(self):
+        """Private single-request cache tree a chunked prefill computes
+        into: seq leaves at full per-lane capacity (one jit signature per
+        chunk length), state leaves per-lane.  Written into the reserved
+        pages by the decode loop at lane assignment — the pipeline never
+        touches the pools."""
+        return jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.model.cache_specs(1, self.cache.capacity),
-        ))
+        )
 
-    def _run_prefill_chunk(self, st, chunk: int):
-        toks = st.resume_tokens[st.prefilled: st.prefilled + chunk]
-        # -1-pad the page list to the fixed per-lane width so _extend keeps
-        # one jit signature per chunk length (padding pages gather as zeros
-        # and are dropped on scatter), instead of retracing per page count
-        pages = np.full(self.cache.pages_per_lane, -1, np.int32)
-        pages[: len(st.pages)] = st.pages
+    def run_prefill(self, st, chunk: int) -> bool:
+        """Advance ``st``'s prefill by one work unit (a chunk, or the whole
+        prompt when chunking is off).  Pure compute on private state;
+        returns True when the prefill is complete."""
+        if self.sched.cfg.prefill_chunk <= 0:
+            toks = jnp.asarray(st.resume_tokens, jnp.int32)[None]
+            logits, st.prefill_cache = self._prefill(self.params, toks)
+            st.prefilled = len(st.resume_tokens)
+            st.last_logits = logits[0, -1]
+            return True
         if st.prefilled == 0:
-            st.extend_state = self._fresh_extend_state()
-        logits, self.cache.pools, st.extend_state = self._extend(
-            self.params, self.cache.pools, st.extend_state,
-            jnp.asarray(pages), jnp.asarray(toks, jnp.int32)[None],
+            st.prefill_cache = self._fresh_prefill_tree()
+        toks = st.resume_tokens[st.prefilled: st.prefilled + chunk]
+        logits, st.prefill_cache = self._extend(
+            self.params, st.prefill_cache,
+            jnp.asarray(toks, jnp.int32)[None],
             jnp.asarray(st.prefilled, jnp.int32),
         )
         st.prefilled += chunk
         st.last_logits = logits[0, -1]
-        self.stats["prefill_tokens"] += chunk
-        if st.remaining_prefill == 0 and st.extend_state is not None:
-            # prefill complete: hold the recurrent state until a lane frees
-            # (same hand-off as the whole-prompt path's held cache)
-            st.state_cache = st.extend_state
-            st.extend_state = None
+        return st.remaining_prefill == 0
 
-    def _run_prefill_whole(self, st):
-        toks = jnp.asarray(st.resume_tokens, jnp.int32)[None]
-        logits, pcache = self._prefill(self.params, toks)
-        self.cache.write_prefill(st.pages, pcache)
-        # recurrent-state leaves need a lane row; hold the cache until one
-        # is assigned (seq leaves are already in the pages)
-        st.state_cache = pcache if self.cache.has_state_leaves() else None
-        st.prefilled = len(st.resume_tokens)
-        st.last_logits = logits[0, -1]
-        self.stats["prefill_tokens"] += len(st.resume_tokens)
-
-    def _finish_prefill(self, st) -> bool:
-        """Sample the prefill token; True if the request finished without
-        ever taking a lane (early EOS / max_new_tokens == 1)."""
-        st.length = len(st.resume_tokens)
-        req = st.req
+    def sample_prefill_token(self, st) -> int:
+        """The prefill's one host-blocking sync — on the pipeline's thread
+        in async mode, so it never stalls a decode step."""
         if st.is_resume:
             # recompute-resume: the continuation token was already sampled
             # before preemption — discard the re-derived logits
-            st.pending_token = int(req.out_tokens[-1])
-            return False
-        tok = int(jnp.argmax(st.last_logits))
-        req.out_tokens.append(tok)
+            return int(st.req.out_tokens[-1])
+        return prefill_logits_token(st.last_logits)
+
+    def finish_prefill(self, st, tok: int) -> bool:
+        """Queue bookkeeping after a finished prefill (under the lock):
+        early EOS / single-token requests retire without ever taking a
+        lane; everything else goes to ready.  Returns True if retired."""
+        st.length = len(st.resume_tokens)
+        req = st.req
         st.pending_token = tok
+        if st.is_resume:
+            self.sched.to_ready(st)
+            return False
+        req.out_tokens.append(tok)
         if (
             len(req.out_tokens) >= req.max_new_tokens
             or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
         ):
+            self.sched.admitting.remove(st)
             self._retire(st)
             return True
+        self.sched.to_ready(st)
         return False
 
     def _retire(self, st):
-        st.req.done = True
-        self.cache.allocator.free(st.pages)
-        st.pages = []
-        if getattr(st, "swap_handle", None) is not None:
-            self.cache.host_free(st.swap_handle)
-            st.swap_handle = None
-        if st.lane >= 0:
-            self.cache.clear_lane(st.lane)
-            self.sched.running.pop(st.lane, None)
-            st.lane = -1
-        self.completed.append(st.req)
+        with self._lock:
+            st.req.done = True
+            self.cache.allocator.free(st.pages)
+            st.pages = []
+            if st.swap_handle is not None:
+                self.cache.host_free(st.swap_handle)
+                st.swap_handle = None
+            # drop every held buffer: a retired request must pin no device
+            # memory (prefill caches, staged restores, logits rows) — and
+            # fold its per-uid preemption counter into the high-water mark
+            # so long-lived engines don't grow a dict entry per request
+            st.prefill_cache = st.state_cache = st.staged = None
+            st.last_logits = None
+            self.sched.retire_uid(st.req.uid)
+            if st.lane >= 0:
+                self.cache.clear_lane(st.lane)
+                self.sched.running.pop(st.lane, None)
+                st.lane = -1
+            st.phase = "done"
+            self.completed.append(st.req)
+            self._cv.notify_all()        # freed pages: admissions may resume
+
+    # -- lane assignment (decode loop only) ------------------------------------
+
+    def _fill_lanes(self) -> bool:
+        """Drain the ready queue into free decode lanes and fold the
+        pipeline's private results into the pools (the decode loop is the
+        only pools writer)."""
+        s, c = self.sched, self.ecfg
+        with self._lock:
+            free_lanes = [l for l in range(c.batch_slots)
+                          if l not in s.running]
+            take = []
+            while s.ready and free_lanes:
+                st = s.ready.pop(0)
+                lane = free_lanes.pop(0)
+                st.lane = lane
+                st.phase = "running"
+                s.running[lane] = st
+                take.append(st)
+            if take:
+                self._cv.notify_all()    # ready drained: backpressure lifts
+        for st in take:
+            self.cache.assign_lane(st.lane, st.pages)
+            if st.staged is not None:                 # swap-in restore
+                self.cache.commit_swap_in(st.staged, st.pages)
+                st.staged = None
+            elif st.prefill_cache is not None:        # held prefill cache
+                self.cache.write_prefill(st.pages, st.prefill_cache,
+                                         lane=st.lane)
+                st.prefill_cache = None
+            if st.state_cache is not None:            # restored lane state
+                self.cache.write_state(st.lane, st.state_cache)
+                st.state_cache = None
+        return bool(take)
 
     # -- decode ----------------------------------------------------------------
 
     def _ensure_pages(self):
-        """Every running lane needs a page slot for its next write position;
-        preempt the longest-running request when the pool is dry."""
-        for lane in sorted(list(self.sched.running)):
-            st = self.sched.running.get(lane)
-            if st is None:
-                continue                      # preempted by an earlier lane
-            while len(st.pages) * self.cache.page_size <= st.length:
-                got = self.cache.allocator.alloc(1)
-                if got is not None:
-                    self.cache.extend_lane(lane, got[0], len(st.pages))
-                    st.pages.append(got[0])
-                    continue
-                victim = self.sched.pick_victim(exclude_lane=lane)
-                if victim is None or victim is st:
+        """Every running lane needs a page slot for its next write position.
+
+        Plans the whole step's page demand at once: reserve what the free
+        pool covers, pick victims for the shortfall (longest-running
+        first), evict them as ONE batch (one device→host copy per leaf —
+        see ``Scheduler.preempt_batch``), then grow the surviving lanes.
+        Runs under the engine lock: the admission pipeline can neither
+        steal the reserved pages nor race the victim bookkeeping."""
+        s, cache = self.sched, self.cache
+        ps = cache.page_size
+        with self._lock:
+            need = {
+                lane: max(0, st.length // ps + 1 - len(st.pages))
+                for lane, st in s.running.items()
+            }
+            total = sum(need.values())
+            if total == 0:
+                return
+            hold = cache.allocator.alloc(
+                min(total, cache.allocator.n_free)) or []
+            victims: list = []
+
+            def shortfall() -> int:
+                want = sum(n for lane, n in need.items()
+                           if s.running[lane] not in victims)
+                freed = sum(len(v.pages) for v in victims)
+                return want - len(hold) - freed
+
+            while shortfall() > 0:
+                cands = [st for st in s.running.values()
+                         if st not in victims]
+                # evicting the LAST running lane is only progress when some
+                # admitted/ready request holds the missing pages and can
+                # take the lane over (the pipeline reserves pages before
+                # the request is preemptible — a state the old serial loop
+                # could never see); with nothing else in flight the pool is
+                # genuinely too small for this request
+                if len(cands) <= 1 and not (s.ready or s.admitting):
+                    cache.allocator.free(hold)
                     raise RuntimeError(
                         "page pool exhausted with no preemptible request — "
                         "grow EngineConfig.n_pages"
                     )
-                self.sched.preempt(victim, self.cache)
+                if not cands:
+                    break
+                victims.append(max(cands,
+                                   key=lambda st: len(st.req.out_tokens)))
+            if victims:
+                s.preempt_batch(victims, cache)
+                self._cv.notify_all()    # freed pages: admissions may resume
+            for lane in sorted(s.running):
+                st = s.running[lane]
+                n = need.get(lane, 0)
+                while n > 0:
+                    page = hold.pop() if hold else cache.allocator.alloc(1)[0]
+                    cache.extend_lane(lane, page, len(st.pages))
+                    st.pages.append(page)
+                    n -= 1
+            if hold:
+                cache.allocator.free(hold)
 
     def _decode_lanes(self, key):
         s, b = self.sched, self.ecfg.batch_slots
@@ -333,12 +445,14 @@ class ServeEngine:
             tokens[lane, 0] = st.pending_token
             positions[lane] = st.length
             active[lane] = True
+        n_active = int(active.sum())
         logits, self.cache.pools = self._decode(
             self.params, self.cache.pools,
             jnp.asarray(self.cache.block_tables),
             jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(active),
         )
         logits = np.asarray(logits[:, 0], np.float32)
+        done = 0
         for lane in sorted(list(s.running)):
             st = s.running[lane]
             req = st.req
@@ -352,7 +466,7 @@ class ServeEngine:
             req.out_tokens.append(tok)
             st.length += 1
             st.pending_token = tok
-            self.stats["decode_tokens"] += 1
+            done += 1
             if (
                 len(req.out_tokens) >= req.max_new_tokens
                 or (self.ecfg.eos_id is not None
@@ -362,90 +476,123 @@ class ServeEngine:
                 or st.length >= self.ecfg.max_len - 1
             ):
                 self._retire(st)
+        with self._lock:
+            self.stats["decode_tokens"] += done
+            self.stats["lane_step_sum"] += n_active
 
     # -- step loop -------------------------------------------------------------
 
     def step(self, key=None) -> bool:
-        """One scheduling round: admissions → prefill chunks → lane
-        assignment → one batched decode step.  Returns False when idle."""
+        """One decode-loop round: (sync mode only: pump the admission
+        pipeline) → drain ready into lanes → one batched decode step.
+        Returns False when the engine is fully drained.  In async mode a
+        round with nothing to decode *waits* briefly on the pipeline's
+        hand-off instead of spinning."""
+        if self.pipeline.error is not None:
+            err, self.pipeline.error = self.pipeline.error, None
+            raise RuntimeError("admission pipeline died") from err
         s, c = self.sched, self.ecfg
-        if s.load == 0:
+        with self._lock:
+            idle = s.load == 0
+        if idle:
+            # park the worker until resubmit — OUTSIDE the lock: the join
+            # waits for the worker, and the worker needs the lock to leave
+            # its cv.wait
+            self.pipeline.shutdown()
             return False
         budget = c.max_step_tokens or (1 << 30)
         budget = max(budget - len(s.running), 0)
-
-        progressed = bool(s.admissions(self.cache, budget))
-        for st in list(s.prefilling):
-            chunk = s.chunk_for(st)
-            if s.cfg.prefill_chunk > 0:
-                chunk = min(chunk, budget)
-            elif budget <= 0:
-                chunk = 0                      # whole-prompt: chunk-granular
-            if chunk <= 0:
-                continue
-            if s.cfg.prefill_chunk > 0:
-                self._run_prefill_chunk(st, chunk)
-            else:
-                self._run_prefill_whole(st)
-            budget -= chunk
-            progressed = True
-            if st.remaining_prefill == 0:
-                s.prefilling.remove(st)
-                if not self._finish_prefill(st):
-                    s.ready.append(st)
-
-        free_lanes = [l for l in range(c.batch_slots) if l not in s.running]
-        while s.ready and free_lanes:
-            st = s.ready.pop(0)
-            lane = free_lanes.pop(0)
-            st.lane = lane
-            self.cache.assign_lane(lane, st.pages)
-            if getattr(st, "state_cache", None) is not None:
-                self.cache.write_state(lane, st.state_cache)
-                st.state_cache = None
-            s.running[lane] = st
-
+        if c.async_prefill:
+            self.pipeline.kick()
+            progressed = False
+        else:
+            progressed = self.pipeline.pump(budget)
+        progressed = self._fill_lanes() or progressed
         if s.running:
             self._ensure_pages()
-            self._decode_lanes(key)
+            if s.running:        # _ensure_pages may have evicted every lane
+                self._decode_lanes(key)
             progressed = True
-
-        if not progressed and s.load:
+        with self._lock:
+            self.stats["steps"] += 1
+            self.stats["lane_slot_sum"] += c.batch_slots
+            occ = self.cache.occupancy()
+            self.stats["occupancy_sum"] += occ
+            self.stats["occupancy_max"] = max(self.stats["occupancy_max"],
+                                              occ)
+        if progressed:
+            self._idle_since = None
+            return True
+        if not c.async_prefill:
+            if s.load:
+                raise RuntimeError(
+                    "scheduler stalled: waiting requests cannot be admitted "
+                    "(page pool too small for the oldest request?)"
+                )
+            return True
+        # async: the pipeline holds all in-flight work — wait for a ready
+        # hand-off (or a completion) instead of burning the step clock.
+        # The deadlock watchdog resets whenever the PIPELINE progresses
+        # (chunks/stages/admissions), not just the decode loop: one slow
+        # work item (a long whole-prompt compile, say) is not a deadlock
+        now = time.monotonic()
+        with self._lock:
+            pipe_mark = sum(self.pipeline.stats.values())
+        if self._idle_since is None or pipe_mark != self._idle_pipe_mark:
+            self._idle_since = now
+            self._idle_pipe_mark = pipe_mark
+        elif now - self._idle_since > 60.0:
             raise RuntimeError(
-                "scheduler stalled: waiting requests cannot be admitted "
-                "(page pool too small for the oldest request?)"
+                "decode loop idle >60s with no admission-pipeline progress "
+                "and undrained requests — pipeline deadlocked or stalled "
+                f"(load={s.load}, admitting={len(s.admitting)})"
             )
-        occ = self.cache.occupancy()
-        self.stats["steps"] += 1
-        self.stats["occupancy_sum"] += occ
-        self.stats["occupancy_max"] = max(self.stats["occupancy_max"], occ)
+        with self._lock:
+            if s.load and not s.ready and not s.running:
+                self._cv.wait(timeout=0.01)
         return True
 
     def run(self, key=None) -> list[Request]:
         done_mark = len(self.completed)
-        while self.sched.load:
+        while self.load:
             if key is not None:
                 key, step_key = jax.random.split(key)
             else:
                 step_key = None
             self.step(step_key)
+        self.pipeline.shutdown()         # park the worker until resubmit
         return self.completed[done_mark:]
 
     # -- telemetry (the router's queue-depth signal) ---------------------------
 
     @property
     def load(self) -> int:
-        return self.sched.load
+        with self._lock:
+            return self.sched.load
 
     def telemetry(self) -> dict:
-        st = dict(self.stats)
+        with self._lock:
+            st = dict(self.stats)
+            st["queue_depth"] = self.sched.queue_depth()
+            st["admitting"] = len(self.sched.admitting)
+            st["ready"] = len(self.sched.ready)
+            st["running"] = len(self.sched.running)
+            st["preemptions"] = self.sched.n_preemptions
+            st["swap_preemptions"] = self.sched.n_swap_preemptions
+            st["recompute_preemptions"] = self.sched.n_recompute_preemptions
+            st["max_request_preemptions"] = max(
+                [self.sched.max_preemptions_per_request]
+                + list(self.sched.preemptions_by_uid.values())
+            )
+            pipe = dict(self.pipeline.stats)
         occ_sum = st.pop("occupancy_sum")
         st["occupancy_mean"] = occ_sum / st["steps"] if st["steps"] else 0.0
-        st["queue_depth"] = self.sched.queue_depth()
-        st["running"] = len(self.sched.running)
-        st["preemptions"] = self.sched.n_preemptions
-        st["swap_preemptions"] = self.sched.n_swap_preemptions
-        st["recompute_preemptions"] = self.sched.n_recompute_preemptions
+        lane_cap = st.pop("lane_slot_sum")
+        lane_act = st.pop("lane_step_sum")
+        st["lane_utilization"] = lane_act / lane_cap if lane_cap else 0.0
+        st["decode_idle_fraction"] = 1.0 - st["lane_utilization"]
+        st["async_prefill"] = self.ecfg.async_prefill
+        st["pipeline"] = pipe
         st["page_occupancy"] = self.cache.occupancy()
         st["host_page_occupancy"] = self.cache.host_occupancy()
         if self.cache.host is not None:

@@ -22,9 +22,23 @@ handle keeps the host pages across a resume and records the clean prefix;
 a second preemption of the same request copies only the pages written since
 (the partially-filled tail page and anything grown after it) plus the
 recurrent state.
+
+Both directions are split into a *bookkeeping* half and a *DMA* half so the
+serving engine can batch and overlap them:
+
+* swap-out: ``reserve`` (host-page allocation + dirty list, under the
+  engine lock) then ``commit_many`` (ONE ``device_get`` per cache leaf for
+  a whole victim set — under a preemption storm the per-victim round-trips
+  dominated);
+* swap-in:  ``stage_in`` (host→device ``device_put``, pools-free, runs on
+  the admission pipeline thread) then ``PagedKVCache.commit_swap_in`` (the
+  scatter into the pools, decode-loop-owned).
+
+``swap_out`` / ``swap_in`` remain as the single-victim compositions.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import jax
@@ -48,9 +62,15 @@ class HostPagePool:
     """Host-memory twin of the device seq-leaf pools + a free list.
 
     Buffers are ordinary numpy arrays — host DRAM, never sharded (see
-    ``dist.sharding.host_cache_axes``); ``swap_in`` stages them back onto
+    ``dist.sharding.host_cache_axes``); ``stage_in`` stages them back onto
     the device with ``jax.device_put`` (optionally through a replicated
     ``NamedSharding`` tree when serving on a mesh).
+
+    Thread-safety: allocator/handle mutation (``reserve``/``free``) happens
+    under the engine lock; the copy halves touch disjoint host rows per
+    handle (a request is never staged and swapped out at the same time —
+    it is either admitting or running, never both), so ``commit_many`` on
+    the decode loop may overlap ``stage_in`` on the admission thread.
     """
 
     def __init__(self, device_pools, n_pages: int, page_size: int):
@@ -67,13 +87,22 @@ class HostPagePool:
             return np.zeros(shape, np.dtype(pool.dtype))
 
         self.buffers = jax.tree_util.tree_map_with_path(leaf, device_pools)
+        # staging (admission thread) and batched swap-out (decode loop) may
+        # overlap; counter bumps go through this lock so none are lost
+        self._stats_lock = threading.Lock()
         self.stats = {
             "swap_outs": 0, "swap_ins": 0,
             "pages_out": 0, "pages_in": 0,
             "bytes_out": 0, "bytes_in": 0,
+            "device_gets": 0,               # host-blocking device→host reads
             "dirty_pages_skipped": 0,       # clean-prefix reuse
             "exhausted_fallbacks": 0,       # host pool couldn't cover a swap
         }
+
+    def _bump(self, **kv) -> None:
+        with self._stats_lock:
+            for k, v in kv.items():
+                self.stats[k] += v
 
     @property
     def n_free(self) -> int:
@@ -84,90 +113,138 @@ class HostPagePool:
 
     # -- swap-out ----------------------------------------------------------
 
-    def swap_out(self, device_pools, device_pages: list[int], lane: int,
-                 length: int, handle: SwapHandle | None) -> SwapHandle | None:
-        """Copy a victim's device pages + its lane's recurrent state to the
-        host tier.  Returns the (possibly reused) handle, or None — with no
-        host allocation held — when the pool cannot cover the new pages
-        (the caller falls back to recompute-preemption)."""
-        n_logical = len(device_pages)
+    def reserve(self, handle: SwapHandle | None, n_logical: int):
+        """Bookkeeping half of a swap-out: grow the handle's host pages to
+        ``n_logical`` and return ``(handle, dirty_logical_indices)``, or
+        None — with no host allocation held — when the pool cannot cover
+        the growth (the caller falls back to recompute-preemption)."""
         if handle is None:
             handle = SwapHandle()
         grow = n_logical - len(handle.host_pages)
         if grow > 0:
             got = self.allocator.alloc(grow)
             if got is None:
-                self.stats["exhausted_fallbacks"] += 1
+                self._bump(exhausted_fallbacks=1)
                 self.free(handle)
                 return None
             handle.host_pages.extend(got)
         dirty = list(range(handle.clean_pages, n_logical))
-        self.stats["dirty_pages_skipped"] += handle.clean_pages
-        if dirty:
-            dev_idx = jnp.asarray([device_pages[i] for i in dirty], jnp.int32)
-            host_idx = np.asarray([handle.host_pages[i] for i in dirty])
+        self._bump(dirty_pages_skipped=handle.clean_pages)
+        return handle, dirty
 
-            def copy(path, buf, pool):
-                if not _is_seq(path):
-                    return
-                chunk = np.asarray(jnp.take(pool, dev_idx, axis=1))
-                buf[:, host_idx] = chunk
-                self.stats["bytes_out"] += chunk.nbytes
-
-            jax.tree_util.tree_map_with_path(copy, self.buffers, device_pools)
-        # recurrent state rows are rewritten every decode step: always dirty
-        handle.state = self._capture_state(device_pools, lane)
-        handle.length = length
-        # pages full at swap time can never change after resume (decode
-        # appends) — they form the clean prefix for the next preemption
-        handle.clean_pages = min(length // self.page_size, n_logical)
-        self.stats["swap_outs"] += 1
-        self.stats["pages_out"] += len(dirty)
-        return handle
-
-    def _capture_state(self, device_pools, lane: int):
+    def commit_many(self, device_pools, items) -> None:
+        """DMA half of a swap-out for a whole victim set: ``items`` is a
+        list of ``(handle, device_pages, dirty, lane, length)``.  All
+        victims' dirty pages are gathered with ONE ``device_get`` per seq
+        leaf (and their lane states with one per state leaf) instead of a
+        round-trip per victim — the swap-out *batching* the nightly bench
+        trend motivated."""
+        if not items:
+            return
+        dev_flat, splits, total = [], [], 0
+        for handle, device_pages, dirty, lane, length in items:
+            dev_flat.extend(device_pages[i] for i in dirty)
+            total += len(dirty)
+            splits.append(total)
+        dev_idx = jnp.asarray(dev_flat, jnp.int32) if dev_flat else None
+        lanes_idx = jnp.asarray([it[3] for it in items], jnp.int32)
         has_state = []
 
-        def leaf(path, pool):
+        def copy(path, buf, pool):
             if _is_seq(path):
+                if dev_idx is not None:
+                    chunk = np.asarray(jnp.take(pool, dev_idx, axis=1))
+                    self._bump(device_gets=1, bytes_out=chunk.nbytes)
+                    lo = 0
+                    for (handle, _pg, dirty, _ln, _len), hi in zip(items,
+                                                                   splits):
+                        if hi > lo:
+                            host_idx = np.asarray(
+                                [handle.host_pages[i] for i in dirty])
+                            buf[:, host_idx] = chunk[:, lo:hi]
+                        lo = hi
                 return np.zeros((), np.dtype(pool.dtype))
-            has_state.append(1)
-            # (layers, 1, *tail): the shape write_state expects back
-            return np.asarray(pool[:, lane: lane + 1])
+            has_state.append(path)
+            return np.asarray(jnp.take(pool, lanes_idx, axis=1))
 
-        tree = jax.tree_util.tree_map_with_path(leaf, device_pools)
-        return tree if has_state else None
+        states = jax.tree_util.tree_map_with_path(copy, self.buffers,
+                                                  device_pools)
+        if has_state:
+            self._bump(device_gets=len(has_state))
+        for vi, (handle, device_pages, dirty, lane, length) in enumerate(items):
+            if has_state:
+                # (layers, 1, *tail): the shape write_state expects back
+                handle.state = jax.tree_util.tree_map_with_path(
+                    lambda path, s, _vi=vi: (
+                        s[:, _vi: _vi + 1] if not _is_seq(path)
+                        else np.zeros((), s.dtype)),
+                    states,
+                )
+            else:
+                handle.state = None
+            handle.length = length
+            # pages full at swap time can never change after resume (decode
+            # appends) — they form the clean prefix for the next preemption
+            handle.clean_pages = min(length // self.page_size,
+                                     len(device_pages))
+            self._bump(swap_outs=1, pages_out=len(dirty))
+
+    def swap_out(self, device_pools, device_pages: list[int], lane: int,
+                 length: int, handle: SwapHandle | None = None):
+        """Single-victim swap-out (reserve + commit_many of one).  Returns
+        the (possibly reused) handle, or None when the host tier is
+        exhausted."""
+        reserved = self.reserve(handle, len(device_pages))
+        if reserved is None:
+            return None
+        handle, dirty = reserved
+        self.commit_many(device_pools,
+                         [(handle, list(device_pages), dirty, lane, length)])
+        return handle
 
     # -- swap-in -----------------------------------------------------------
 
-    def swap_in(self, device_pools, handle: SwapHandle,
-                device_pages: list[int], shardings=None):
-        """Restore every host page of ``handle`` into freshly allocated
-        ``device_pages`` (parallel order).  Host pages stay allocated — the
-        clean prefix is reused if the request is preempted again.  Returns
-        (new_device_pools, state_tree-or-None for ``write_state``)."""
-        assert len(device_pages) == len(handle.host_pages)
-        dev_idx = jnp.asarray(device_pages, jnp.int32)
+    def stage_in(self, handle: SwapHandle, shardings=None):
+        """Host→device DMA half of a restore: stage every host page of
+        ``handle`` (and its captured state) onto the device WITHOUT touching
+        any pool — safe to run on the admission pipeline thread while the
+        decode loop owns the pools.  Returns ``(staged_tree, state_tree)``;
+        the decode loop folds them in via ``PagedKVCache.commit_swap_in`` /
+        ``write_state``.  Host pages stay allocated — the clean prefix is
+        reused if the request is preempted again."""
         host_idx = np.asarray(handle.host_pages)
 
-        def leaf(path, pool, buf, sh):
+        def leaf(path, buf, sh):
             if not _is_seq(path):
-                return pool
+                # structure-preserving placeholder (state rides separately)
+                return np.zeros((), buf.dtype)
             chunk = buf[:, host_idx]
-            staged = (jax.device_put(chunk, sh) if sh is not None
-                      else jnp.asarray(chunk))
-            self.stats["bytes_in"] += chunk.nbytes
-            return pool.at[:, dev_idx].set(staged)
+            self._bump(bytes_in=chunk.nbytes)
+            return (jax.device_put(chunk, sh) if sh is not None
+                    else jnp.asarray(chunk))
 
         sh_tree = (shardings if shardings is not None
-                   else jax.tree.map(lambda _: None, device_pools))
-        pools = jax.tree_util.tree_map_with_path(
-            leaf, device_pools, self.buffers, sh_tree
-        )
-        self.stats["swap_ins"] += 1
-        self.stats["pages_in"] += len(device_pages)
+                   else jax.tree.map(lambda _: None, self.buffers))
+        staged = jax.tree_util.tree_map_with_path(leaf, self.buffers, sh_tree)
+        self._bump(swap_ins=1, pages_in=len(handle.host_pages))
         state = (jax.tree.map(jnp.asarray, handle.state)
                  if handle.state is not None else None)
+        return staged, state
+
+    def swap_in(self, device_pools, handle: SwapHandle,
+                device_pages: list[int], shardings=None):
+        """Single-shot restore (stage_in + scatter): returns
+        ``(new_device_pools, state_tree-or-None for write_state)``."""
+        assert len(device_pages) == len(handle.host_pages)
+        staged, state = self.stage_in(handle, shardings)
+        dev_idx = jnp.asarray(device_pages, jnp.int32)
+
+        def leaf(path, pool, chunk):
+            if not _is_seq(path):
+                return pool
+            return pool.at[:, dev_idx].set(chunk)
+
+        pools = jax.tree_util.tree_map_with_path(leaf, device_pools, staged)
         return pools, state
 
     def free(self, handle: SwapHandle | None) -> None:

@@ -39,11 +39,20 @@ def _is_seq(path) -> bool:
 
 
 class PageAllocator:
-    """LIFO free list over ``n_pages`` physical pages."""
+    """LIFO free list over ``n_pages`` physical pages.
+
+    Callers serialize access (the serving engine holds its bookkeeping lock
+    around every alloc/free — the admission pipeline thread and the decode
+    loop share this free list).  The membership set makes the two
+    cross-thread failure modes loud instead of silent: a page double-freed
+    (or freed by one thread while handed out by another) trips the assert
+    the moment it happens, not steps later as token corruption.
+    """
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
+        self._free_set = set(self._free)
 
     @property
     def n_free(self) -> int:
@@ -54,12 +63,23 @@ class PageAllocator:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(pages)
         return pages
 
     def free(self, pages: list[int]) -> None:
         for p in pages:
             assert 0 <= p < self.n_pages
+            assert p not in self._free_set, f"page {p} double-freed"
             self._free.append(p)
+            self._free_set.add(p)
+
+    def check_invariant(self) -> None:
+        """Free list sane: no duplicates, every entry in range, set and
+        list agree.  Cheap enough for tests to call between stress steps."""
+        assert len(self._free) == len(self._free_set), (
+            "free list/set diverged (double-free or lost page)"
+        )
+        assert self._free_set <= set(range(self.n_pages))
 
 
 # ---------------------------------------------------------------------------
@@ -129,52 +149,11 @@ def absorb_decode(pools, new_views, block_tables, positions, active,
     return jax.tree_util.tree_map_with_path(leaf, pools, new_views)
 
 
-def gather_lane_view(pools, pages: jax.Array):
-    """Single-request contiguous view from its own pages (chunked prefill):
-    seq leaves → (layers, 1, n_req_pages*PS, *t); state leaves pass."""
-    return gather_views(pools, pages[None])
-
-
-def merge_lane_state(views, state):
-    """Swap the recurrent-state leaves of a single-lane view tree for the
-    request's carried extend state (chunked prefill threads SSD / RG-LRU
-    state host-side per request until a lane is assigned; seq leaves come
-    from the gathered pages and win unchanged)."""
-
-    def leaf(path, v, s):
-        return v if _is_seq(path) else s
-
-    return jax.tree_util.tree_map_with_path(leaf, views, state)
-
-
-def strip_seq_leaves(tree):
-    """Shrink a single-lane cache tree to its recurrent-state leaves: seq
-    leaves become scalar zero placeholders (structure preserved for
-    ``merge_lane_state``) so a carried extend state costs O(state), not a
-    whole dense lane of KV — the allocation the paged path exists to avoid."""
-
-    def leaf(path, x):
-        return jnp.zeros((), x.dtype) if _is_seq(path) else x
-
-    return jax.tree_util.tree_map_with_path(leaf, tree)
-
-
-def scatter_lane_view(pools, pages: jax.Array, views, page_size: int):
-    """Write a single-request view (chunked-prefill output) back into its
-    pages wholesale.  ``pages`` may be -1-padded to a fixed width (one jit
-    signature per chunk length); padding entries are dropped via the same
-    out-of-bounds sentinel as ``absorb_decode``."""
-
-    def leaf(path, pool, view):
-        if not _is_seq(path):
-            return pool                     # state untouched by extend_step
-        reps = pool.shape[0]
-        n_req = pages.shape[0]
-        paged = view.reshape((reps, n_req, page_size) + pool.shape[3:])
-        safe = jnp.where(pages >= 0, pages, pool.shape[1])
-        return pool.at[:, safe].set(paged.astype(pool.dtype), mode="drop")
-
-    return jax.tree_util.tree_map_with_path(leaf, pools, views)
+# (the per-lane gather/scatter extend helpers — gather_lane_view,
+# merge_lane_state, strip_seq_leaves, scatter_lane_view — were removed with
+# the two-loop engine: chunked prefill now computes into a PRIVATE
+# capacity-length cache tree on the admission pipeline and the decode loop
+# folds it into the pages at lane assignment via write_prefill)
 
 
 # ---------------------------------------------------------------------------
@@ -243,8 +222,11 @@ class PagedKVCache:
     # -- eager (per-request) writes ----------------------------------------
 
     def write_prefill(self, pages: list[int], cache, lane: int | None = None):
-        """Scatter a whole-prompt prefill cache (leaves (layers, 1, s, *t))
-        into ``pages``; state leaves go to ``lane``'s row when given."""
+        """Scatter a prefill cache (leaves (layers, 1, s, *t)) into
+        ``pages``; state leaves go to ``lane``'s row when given.  Seq leaves
+        shorter than the page span are zero-padded; longer ones (a chunked
+        prefill's capacity-length private tree) are sliced — positions past
+        the reserved pages are unwritten zeros by construction."""
         ps = self.page_size
         pages_arr = jnp.asarray(pages, jnp.int32)
 
@@ -252,11 +234,13 @@ class PagedKVCache:
             if _is_seq(path):
                 reps, s = pc.shape[0], pc.shape[2]
                 cap = len(pages) * ps
-                pad = [(0, 0)] * pc.ndim
-                pad[2] = (0, cap - s)
-                paged = jnp.pad(pc, pad).reshape(
-                    (reps, len(pages), ps) + pc.shape[3:]
-                )
+                if s > cap:
+                    pc = pc[:, :, :cap]
+                else:
+                    pad = [(0, 0)] * pc.ndim
+                    pad[2] = (0, cap - s)
+                    pc = jnp.pad(pc, pad)
+                paged = pc.reshape((reps, len(pages), ps) + pc.shape[3:])
                 return pool.at[:, pages_arr].set(paged.astype(pool.dtype))
             if lane is None:
                 return pool
@@ -285,6 +269,24 @@ class PagedKVCache:
 
     # -- host tier (swap-vs-recompute preemption) --------------------------
 
+    def swap_reserve(self, st):
+        """Bookkeeping half of a swap-out for one victim: reserve host
+        pages and compute the dirty list.  Returns ``(handle, dirty)`` or
+        None (host tier absent/exhausted → recompute fallback).  Call under
+        the engine lock."""
+        if self.host is None:
+            return None
+        return self.host.reserve(st.swap_handle, len(st.pages))
+
+    def swap_out_batch(self, swap_items) -> None:
+        """DMA half for a victim set: ``swap_items`` is ``[(st, dirty)]``
+        with host pages already reserved.  ONE device→host read per cache
+        leaf covers every victim (vs one per victim before)."""
+        self.host.commit_many(self.pools, [
+            (st.swap_handle, list(st.pages), dirty, st.lane, st.length)
+            for st, dirty in swap_items
+        ])
+
     def swap_out(self, pages: list[int], lane: int, length: int,
                  handle=None):
         """Copy a victim's pages + lane state to the host tier.  Returns a
@@ -293,6 +295,29 @@ class PagedKVCache:
         if self.host is None:
             return None
         return self.host.swap_out(self.pools, pages, lane, length, handle)
+
+    def stage_in(self, handle):
+        """Host→device staging for a restore — pure DMA, pools untouched
+        (safe on the admission pipeline thread).  Returns
+        ``(staged_tree, state_tree)`` for ``commit_swap_in``."""
+        return self.host.stage_in(handle, self.host_shardings)
+
+    def commit_swap_in(self, staged, pages: list[int]) -> None:
+        """Scatter a staged restore into freshly allocated device ``pages``
+        (decode-loop-owned: the only thread that writes the pools).
+        ``pages`` may carry one extra growth-slack page beyond the staged
+        rows (see ``Scheduler.admit_next``) — only the staged prefix is
+        written."""
+
+        def leaf(path, pool, chunk):
+            if not _is_seq(path):
+                return pool
+            dev_idx = jnp.asarray(pages[: chunk.shape[1]], jnp.int32)
+            return pool.at[:, dev_idx].set(chunk)
+
+        self.pools = jax.tree_util.tree_map_with_path(
+            leaf, self.pools, staged
+        )
 
     def swap_in(self, handle, pages: list[int]):
         """Restore a swapped request into freshly allocated device ``pages``;

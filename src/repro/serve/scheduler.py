@@ -1,16 +1,27 @@
 """Request scheduler for the paged serving engine.
 
 Host-side policy — the only jax it ever touches is through the cache's
-swap methods.  The engine asks the scheduler three questions each step:
-which waiting requests to admit (admission control against the free page
-pool + the per-step token budget; a *swapped-out* request is re-admitted by
-restoring its host-tier pages instead of prefilling), how large a prefill
-chunk each in-flight prefill may run this step (prefill chunking keeps one
-long prompt from monopolizing a step), and which running request to evict
-when the page pool runs dry (preempt-longest-running: the request with the
-most generated tokens has consumed the most pool).
+swap methods.  Requests move through an explicit state machine::
 
-Eviction itself is a policy (``SchedulerConfig.preempt_policy``):
+    waiting ──admit──▶ admitting(phase='prefill')  ──▶ ready ──▶ running
+        │                 (prefill chunks run)           ▲
+        └──admit──▶ admitting(phase='restore') ──stage───┘
+                      (host-tier DMA, no compute)
+
+Admission *reserves* pages up front (the whole prompt + one decode slot,
+or the swapped page count), so an admitted request can always finish its
+prefill/restore and the admission pipeline never races the decode loop on
+the free list: pages owned by an admitting request are invisible to
+``_ensure_pages`` until the request reaches ``running``.
+
+Every method here mutates shared queues and the page allocators, so the
+engine calls them under its single bookkeeping lock (``ServeEngine._lock``)
+— the scheduler itself stays lock-free and synchronous.  The expensive
+parts (prefill compute, swap DMA) happen *outside* the lock, in
+``serve.admission.AdmissionPipeline`` (async mode: a worker thread; sync
+mode: inline in ``step``).
+
+Eviction is a policy (``SchedulerConfig.preempt_policy``):
 
 * ``swap``      — move the victim's pages to the host-DRAM tier and restore
   them on resume (the paper's hierarchy: eviction is a *move* down the
@@ -20,6 +31,11 @@ Eviction itself is a policy (``SchedulerConfig.preempt_policy``):
   recompute when recompute is cheaper or the host tier is exhausted.
 * ``recompute`` — free the pages and re-prefill prompt + generated tokens
   on resume (the v2 behavior, kept as the proven-identical fallback).
+
+``preempt_batch`` evicts a whole victim *set* with ONE device→host copy per
+cache leaf (``cache.swap_out_batch``) instead of one per victim — under a
+preemption storm the per-victim ``device_get`` round-trips dominated the
+swap cost.
 
 Queue-ordering policies order the waiting queue only:
 
@@ -44,7 +60,10 @@ class SchedulerConfig:
     policy: str = "fcfs"            # fcfs | spf
     max_step_tokens: int = 0        # 0 = unbounded (prefill + decode per step)
     prefill_chunk: int = 0          # 0 = whole-prompt prefill
-    max_inflight_prefills: int = 2  # prefills admitted but not yet decoding
+    # backpressure: requests admitted (prefilling/restoring) or ready but not
+    # yet decoding.  Bounds the admission pipeline's in-flight work — and,
+    # with it, the device pages + held prefill caches pinned by admissions
+    max_inflight_prefills: int = 2
     preempt_policy: str = "swap"    # swap | recompute
     # cost of moving one token of KV through the host tier relative to
     # recomputing it (the swap-vs-recompute cost model; 0 = always swap)
@@ -57,16 +76,22 @@ class RequestState:
 
     req: object                     # serve.engine.Request
     resume_tokens: np.ndarray       # tokens to (re)prefill: prompt [+generated]
+    phase: str = "waiting"          # waiting|prefill|restore|ready|running
     pages: list = field(default_factory=list)
     lane: int = -1
-    prefilled: int = 0              # resume_tokens already written to pages
+    prefilled: int = 0              # resume_tokens already written
     length: int = 0                 # kv entries valid in pages
     pending_token: int = -1         # next decode input (last sampled token)
     is_resume: bool = False         # re-prefill after preemption
     preemptions: int = 0
     last_logits: object = None      # final prefill logits (one vocab row)
-    state_cache: object = None      # held recurrent state until a lane frees
-    extend_state: object = None     # chunked-prefill carried SSD/RG-LRU state
+    prefill_cache: object = None    # private prefill cache tree, held until a
+    #                                 lane is assigned (the pipeline computes
+    #                                 into it; only the decode loop writes
+    #                                 pools)
+    state_cache: object = None      # restored recurrent state awaiting a lane
+    staged: object = None           # host→device staged page chunks awaiting
+    #                                 the decode loop's scatter (swap-in)
     swapped: bool = False           # pages live in the host tier
     swap_handle: object = None      # host_tier.SwapHandle (survives resume:
     #                                 its clean prefix skips recopies)
@@ -77,8 +102,8 @@ class RequestState:
 
 
 class Scheduler:
-    """Admission / chunking / preemption policy over four queues:
-    waiting → prefilling → ready → running(lane)."""
+    """Admission / chunking / preemption policy over the queue state
+    machine: waiting → admitting (prefill|restore) → ready → running."""
 
     def __init__(self, cfg: SchedulerConfig):
         if cfg.policy not in ("fcfs", "spf"):
@@ -89,13 +114,17 @@ class Scheduler:
             )
         self.cfg = cfg
         self.waiting: list[RequestState] = []
-        self.prefilling: list[RequestState] = []
+        self.admitting: list[RequestState] = []
         self.ready: list[RequestState] = []
         self.running: dict[int, RequestState] = {}     # lane → state
         self.n_preemptions = 0
         self.n_swap_preemptions = 0
         self.n_recompute_preemptions = 0
+        # live per-uid counters only — cleared on retire (a long-lived engine
+        # must not grow a dict entry per request it ever served); the
+        # high-water mark survives in max_preemptions_per_request
         self.preemptions_by_uid: dict[int, int] = {}
+        self.max_preemptions_per_request = 0
 
     # -- queue accounting ---------------------------------------------------
 
@@ -106,68 +135,93 @@ class Scheduler:
 
     @property
     def load(self) -> int:
-        return (len(self.waiting) + len(self.prefilling) + len(self.ready)
+        return (len(self.waiting) + len(self.admitting) + len(self.ready)
                 + len(self.running))
 
     def queue_depth(self) -> int:
         return len(self.waiting)
 
+    def retire_uid(self, uid: int) -> None:
+        """Drop the per-uid preemption counter (fold into the high-water
+        mark) so long-lived engines don't accumulate one entry per request."""
+        n = self.preemptions_by_uid.pop(uid, 0)
+        if n > self.max_preemptions_per_request:
+            self.max_preemptions_per_request = n
+
     # -- admission ----------------------------------------------------------
 
-    def _pop_waiting(self) -> RequestState:
+    def _next_waiting_index(self) -> int:
+        # swapped requests resume first whatever the ordering policy: they
+        # sit at the queue front, hold host pages, and starving them would
+        # pin the host tier
+        swapped = [i for i, s in enumerate(self.waiting) if s.swapped]
+        if swapped:
+            return swapped[0]
         if self.cfg.policy == "spf":
-            i = int(np.argmin([len(s.resume_tokens) for s in self.waiting]))
-        else:
-            i = 0
-        return self.waiting.pop(i)
+            return int(np.argmin([len(s.resume_tokens)
+                                  for s in self.waiting]))
+        return 0
 
-    def admissions(self, cache, budget: int) -> list[RequestState]:
-        """Move waiting→prefilling while pages, budget, and the in-flight
-        bound allow; pages for the whole prompt (+1 decode slot) are
-        reserved up front so an admitted prefill can always finish.
+    def admit_next(self, cache) -> Optional[RequestState]:
+        """Reserve pages for the next admissible waiting request and move it
+        to ``admitting`` (phase ``prefill`` or ``restore``).  Returns None
+        when nothing can be admitted: queue empty, in-flight bound hit, or
+        the head request's reservation doesn't fit the free pool.
 
-        A swapped-out request is re-admitted by restoring its host-tier
-        pages into fresh device pages (``cache.swap_in``) and goes straight
-        to the ready queue — no prefill runs, and no prefill budget is
-        consumed (the restore is a DMA, not compute)."""
-        admitted = []
-        while (self.waiting and budget > 0
-               and len(self.prefilling) + len(self.ready)
-               < self.cfg.max_inflight_prefills):
-            # swapped requests resume first whatever the ordering policy:
-            # they sit at the queue front, hold host pages, and starving
-            # them would pin the host tier
-            swapped = [i for i, s in enumerate(self.waiting) if s.swapped]
-            if swapped:
-                nxt_i = swapped[0]
-            elif self.cfg.policy == "spf":
-                nxt_i = int(np.argmin([len(s.resume_tokens)
-                                       for s in self.waiting]))
-            else:
-                nxt_i = 0
-            nxt = self.waiting[nxt_i]
-            if nxt.swapped:
-                pages = cache.allocator.alloc(len(nxt.swap_handle.host_pages))
-                if pages is None:
-                    break
-                st = self.waiting.pop(nxt_i)
-                st.pages = pages
-                st.state_cache = cache.swap_in(st.swap_handle, pages)
-                st.swapped = False
-                self.ready.append(st)
-                admitted.append(st)
-                continue
-            need = len(nxt.resume_tokens) + 1
-            pages = cache.alloc(need)
+        Pure bookkeeping — no compute, no DMA.  Call under the engine lock;
+        the admission pipeline then runs the actual prefill/staging outside
+        it."""
+        if not self.waiting:
+            return None
+        if (len(self.admitting) + len(self.ready)
+                >= self.cfg.max_inflight_prefills):
+            return None
+        i = self._next_waiting_index()
+        nxt = self.waiting[i]
+        if nxt.swapped:
+            # reserve a decode slot alongside the restored pages when the
+            # last page came back full — otherwise a restored lane needs a
+            # growth page before its first decode step, and on a bone-dry
+            # pool the evict↔assign cycle could spin without ever making a
+            # token of progress
+            n = len(nxt.swap_handle.host_pages)
+            extra = 1 if n * cache.page_size <= nxt.length else 0
+            pages = cache.allocator.alloc(n + extra)
             if pages is None:
-                break
-            st = self.waiting.pop(nxt_i)
+                return None
+            st = self.waiting.pop(i)
+            st.pages = pages
+            st.phase = "restore"
+        else:
+            pages = cache.alloc(len(nxt.resume_tokens) + 1)
+            if pages is None:
+                return None
+            st = self.waiting.pop(i)
             st.pages = pages
             st.prefilled = 0
-            self.prefilling.append(st)
+            st.phase = "prefill"
+        self.admitting.append(st)
+        return st
+
+    def admissions(self, cache, budget: int) -> list[RequestState]:
+        """Admit while pages, the token budget, and the in-flight bound
+        allow (the sync-mode batch form of ``admit_next``).  Restores cost
+        no budget — the staging is a DMA, not compute."""
+        admitted = []
+        while budget > 0:
+            st = self.admit_next(cache)
+            if st is None:
+                break
             admitted.append(st)
-            budget -= min(self.chunk_for(st), budget)
+            if st.phase == "prefill":
+                budget -= min(self.chunk_for(st), budget)
         return admitted
+
+    def to_ready(self, st: RequestState) -> None:
+        """Admission pipeline hand-off: prefill/restore finished."""
+        self.admitting.remove(st)
+        st.phase = "ready"
+        self.ready.append(st)
 
     def chunk_for(self, st: RequestState) -> int:
         if self.cfg.prefill_chunk <= 0:
@@ -176,12 +230,15 @@ class Scheduler:
 
     # -- preemption ---------------------------------------------------------
 
-    def pick_victim(self, exclude_lane: int = -1) -> Optional[RequestState]:
+    def pick_victim(self, exclude_lane: int = -1,
+                    exclude=()) -> Optional[RequestState]:
         """Longest-running request (most generated tokens); prefer not to
-        evict ``exclude_lane`` (the lane asking for the page)."""
-        cands = [s for l, s in self.running.items() if l != exclude_lane]
+        evict ``exclude_lane`` (the lane asking for the page) and never one
+        of ``exclude`` (already-picked victims)."""
+        cands = [s for l, s in self.running.items()
+                 if l != exclude_lane and s not in exclude]
         if not cands:
-            cands = list(self.running.values())
+            cands = [s for s in self.running.values() if s not in exclude]
         if not cands:
             return None
         return max(cands, key=lambda s: len(s.req.out_tokens))
@@ -200,50 +257,68 @@ class Scheduler:
         recompute_tokens = len(st.req.prompt) + len(st.req.out_tokens) - 1
         return swap_cost < recompute_tokens
 
-    def preempt(self, st: RequestState, cache) -> str:
-        """Evict ``st`` from its lane, by the configured policy.
+    def preempt_batch(self, victims: list[RequestState], cache) -> list[str]:
+        """Evict a victim set by the configured policy, with ONE device→host
+        copy per cache leaf for all swap-mode victims (``swap_out_batch``)
+        instead of a per-victim ``device_get``.
 
-        ``swap``: move its pages to the host tier (cost model permitting and
-        host pages available) and queue it for a restore-resume — length,
-        pending token, and recurrent state all survive, so no prefill
-        re-runs.  Otherwise (policy ``recompute``, cost model says moving is
-        dearer, or host tier exhausted): free the pages and queue for
-        recompute-resume at the front (re-prefills prompt + generated-so-
-        far; greedy decode then reproduces the identical continuation).
-        Returns the mode that actually happened: 'swap' | 'recompute'.
+        Per victim the cost model (and host-tier reservation) decides
+        ``swap`` vs ``recompute`` exactly as the single-victim path did;
+        returns the per-victim modes.  Called (and run, copy included)
+        under the engine lock: a preemption storm briefly blocks the
+        admission pipeline for one batched device_get per leaf — the
+        batching is exactly what keeps that window short.  Releasing the
+        lock around the copy (reserve/copy/finalize phases) is the known
+        follow-on if storms ever dominate the pipeline's wait time.
         """
-        mode = "recompute"
-        if (self.cfg.preempt_policy == "swap"
-                and self.swap_beats_recompute(st, cache)):
-            handle = cache.swap_out(st.pages, st.lane, st.length,
-                                    st.swap_handle)
-            if handle is not None:
-                st.swap_handle = handle
-                mode = "swap"
-        cache.allocator.free(st.pages)
-        cache.clear_lane(st.lane)
-        del self.running[st.lane]
-        st.pages = []
-        st.lane = -1
-        if mode == "swap":
-            st.swapped = True               # length/pending_token survive
-            self.n_swap_preemptions += 1
-        else:
-            # the host copy (if any) is invalidated by re-prefill
-            cache.host_free(st.swap_handle)
-            st.swap_handle = None
-            st.swapped = False
-            st.resume_tokens = np.concatenate([
-                np.asarray(st.req.prompt, np.int32),
-                np.asarray(st.req.out_tokens[:-1], np.int32),
-            ])
-            st.prefilled = 0
-            st.length = 0
-            st.is_resume = True
-            self.n_recompute_preemptions += 1
-        st.preemptions += 1
-        self.n_preemptions += 1
-        uid = st.req.uid
-        self.preemptions_by_uid[uid] = self.preemptions_by_uid.get(uid, 0) + 1
-        self.waiting.insert(0, st)
-        return mode
+        plan = []                       # (st, mode)
+        swap_items = []                 # (st, dirty-index-list)
+        for st in victims:
+            mode = "recompute"
+            if (self.cfg.preempt_policy == "swap"
+                    and self.swap_beats_recompute(st, cache)):
+                reserved = cache.swap_reserve(st)
+                if reserved is not None:
+                    st.swap_handle, dirty = reserved
+                    swap_items.append((st, dirty))
+                    mode = "swap"
+            plan.append((st, mode))
+        if swap_items:
+            cache.swap_out_batch(swap_items)
+        modes = []
+        for st, mode in plan:
+            cache.allocator.free(st.pages)
+            cache.clear_lane(st.lane)
+            del self.running[st.lane]
+            st.pages = []
+            st.lane = -1
+            if mode == "swap":
+                st.swapped = True           # length/pending_token survive
+                self.n_swap_preemptions += 1
+            else:
+                # the host copy (if any) is invalidated by re-prefill
+                cache.host_free(st.swap_handle)
+                st.swap_handle = None
+                st.swapped = False
+                st.resume_tokens = np.concatenate([
+                    np.asarray(st.req.prompt, np.int32),
+                    np.asarray(st.req.out_tokens[:-1], np.int32),
+                ])
+                st.prefilled = 0
+                st.length = 0
+                st.is_resume = True
+                self.n_recompute_preemptions += 1
+            st.phase = "waiting"
+            st.preemptions += 1
+            self.n_preemptions += 1
+            uid = st.req.uid
+            self.preemptions_by_uid[uid] = (
+                self.preemptions_by_uid.get(uid, 0) + 1
+            )
+            self.waiting.insert(0, st)
+            modes.append(mode)
+        return modes
+
+    def preempt(self, st: RequestState, cache) -> str:
+        """Single-victim eviction (the batch of one)."""
+        return self.preempt_batch([st], cache)[0]

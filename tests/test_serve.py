@@ -423,7 +423,8 @@ def test_scheduler_admission_respects_pool_and_inflight():
         s.add(_stub_req(uid, 8))
     cache = _StubCache(n_pages=100)
     assert len(s.admissions(cache, budget=1 << 30)) == 1   # in-flight bound
-    s.prefilling.clear()
+    assert [st.phase for st in s.admitting] == ["prefill"]
+    s.admitting.clear()
     assert len(s.admissions(_StubCache(n_pages=1), budget=1 << 30)) == 0
     assert len(s.waiting) == 2                             # nothing consumed
 
@@ -607,3 +608,13 @@ def test_serve_bench_smoke(tmp_path):
         assert row["recompute"]["preemptions"] > 0
         assert row["swap"]["swap_preemptions"] > 0
         assert row["recompute"]["swap_preemptions"] == 0
+    # the admission-pipeline storm: async/sync token identity held and the
+    # gated ratio + per-mode decode-idle telemetry are present
+    a = report["async"]
+    assert a["tokens_identical"] is True
+    assert a["async_vs_sync_tokens_per_s"] > 0
+    for mode in ("on", "off"):
+        assert 0.0 <= a["modes"][mode]["decode_idle_fraction"] <= 1.0
+        assert a["modes"][mode]["step_latency_ms"]["p50"] > 0
+    assert a["families"]["mamba2-130m"]["tokens_identical"] is True
+    assert report["swap_batch"]["speedup"] > 0

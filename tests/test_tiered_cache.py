@@ -177,8 +177,12 @@ def test_double_preemption_reuses_clean_host_pages():
                                    swap_token_cost=0.0),
                       _reqs(cfg))
     assert want == got
-    # at least one request was preempted twice...
-    assert max(eng.sched.preemptions_by_uid.values()) >= 2
+    # at least one request was preempted twice... (the per-uid counters are
+    # cleared on retire so long-lived engines don't grow a dict entry per
+    # request — the high-water mark is what survives)
+    assert eng.sched.preemptions_by_uid == {}
+    assert eng.sched.max_preemptions_per_request >= 2
+    assert eng.telemetry()["max_request_preemptions"] >= 2
     # ...and its second swap-out skipped the still-clean full pages
     assert eng.cache.host.stats["dirty_pages_skipped"] > 0
     # clean-prefix reuse means strictly fewer pages copied out than in
