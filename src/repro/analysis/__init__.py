@@ -1,0 +1,34 @@
+"""repro-lint: repo-specific static analysis + runtime sanitizer.
+
+The two-loop serving engine (PR 5) rests on four invariants that used to
+live only in comments and stress tests:
+
+1. **no-jax-under-lock** — no jax dispatch ever runs lexically inside a
+   ``with self._lock`` / ``with self._cv`` block in ``repro.serve``;
+2. **sole-writer** — the decode loop is the only pools/block-table writer
+   (``@pool_mutator`` declares mutators, ``@decode_loop_only`` /
+   ``@admission_api`` declare which thread's call graph may reach them);
+3. **phase-transitions** — ``RequestState.phase`` only moves along the
+   declared waiting → admitting(prefill|restore) → ready → running edges;
+4. **pallas-trace-safety** — Pallas kernel bodies never branch/loop/cast on
+   tracer values (the bug class the ``ref.py`` oracles can't catch).
+
+``python -m repro.analysis.lint src/`` checks 1-4 statically (AST/CFG, no
+new dependencies); ``REPRO_SANITIZE=1`` enables the runtime half
+(``repro.analysis.sanitizer``): thread-ownership tracking on every pool
+mutation, epoch-checked alloc/free pairs (page-id use-after-free across
+preemption/swap), lock-discipline asserts, and ``check_invariant`` after
+every mutating op — violations raise with the full access history.
+"""
+from . import sanitizer
+from .ownership import admission_api, decode_loop_only, pool_mutator
+from .phases import PHASE_EDGES, PHASE_WRITERS
+
+__all__ = [
+    "admission_api",
+    "decode_loop_only",
+    "pool_mutator",
+    "sanitizer",
+    "PHASE_EDGES",
+    "PHASE_WRITERS",
+]

@@ -1,0 +1,107 @@
+"""Ownership annotations for the two-loop serving engine.
+
+These decorators are the machine-checkable form of the thread discipline
+documented in ``serve/engine.py`` / ``serve/admission.py``:
+
+* ``@pool_mutator(kind)`` — declares a method that mutates engine-shared
+  state.  ``kind="pools"``: device page pools / block tables / host-tier
+  page buffers, owned exclusively by the decode loop.  ``kind="free_list"``:
+  page allocators and host-tier handles, shared across threads but only
+  under the engine bookkeeping lock.
+* ``@decode_loop_only`` — a method that may only run on the decode-loop
+  thread (the sole pools writer).
+* ``@admission_api`` — a method in the admission pipeline's call graph
+  (worker thread): it may reserve/free pages *under the lock* and compute
+  into private buffers, but must never reach a ``pool_mutator("pools")``.
+
+The static rule ``repro.analysis.rules.sole_writer`` reads these markers
+from the AST (undeclared mutations, admission-reachable pools writes); the
+runtime sanitizer (``REPRO_SANITIZE=1``) enforces them dynamically with
+thread/lock/page-epoch tracking.  When the sanitizer is disabled the
+wrappers cost one boolean check per call.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from collections.abc import Callable
+from typing import Any, TypeVar
+
+from . import sanitizer
+
+__all__ = ["pool_mutator", "decode_loop_only", "admission_api",
+           "MUTATOR_KINDS"]
+
+F = TypeVar("F", bound=Callable[..., Any])
+
+MUTATOR_KINDS = ("pools", "free_list")
+
+
+def _page_args_extractor(fn: Callable[..., Any]):
+    """Build a (args, kwargs) -> list[int]|None extractor for parameters
+    named ``pages``/``page`` — the page-id arguments the sanitizer
+    liveness/epoch-checks."""
+    try:
+        params = list(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):          # pragma: no cover
+        return lambda args, kwargs: None
+
+    def extract(args, kwargs):
+        out: list[int] = []
+        bound = dict(zip(params[1:], args))  # skip self
+        bound.update(kwargs)
+        pages = bound.get("pages")
+        if pages:
+            out.extend(int(p) for p in pages)
+        page = bound.get("page")
+        if page is not None:
+            out.append(int(page))
+        return out or None
+
+    return extract
+
+
+def pool_mutator(kind: str) -> Callable[[F], F]:
+    """Declare a method that mutates pools/block tables (``"pools"``) or a
+    lock-protected free list (``"free_list"``)."""
+    if kind not in MUTATOR_KINDS:
+        raise ValueError(f"unknown pool_mutator kind: {kind!r}")
+
+    def deco(fn: F) -> F:
+        extract = _page_args_extractor(fn)
+
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            if not sanitizer.enabled():
+                return fn(self, *args, **kwargs)
+            pages = extract(args, kwargs)
+            sanitizer.pre_mutate(self, kind, fn.__name__, pages)
+            result = fn(self, *args, **kwargs)
+            sanitizer.post_mutate(self, kind, fn.__name__, pages, result)
+            return result
+
+        wrapper._repro_pool_mutator = kind          # type: ignore[attr-defined]
+        return wrapper                              # type: ignore[return-value]
+
+    return deco
+
+
+def decode_loop_only(fn: F) -> F:
+    """Declare a method that must run on the decode-loop thread only."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        if sanitizer.enabled():
+            sanitizer.on_decode_loop_entry(self, fn.__name__)
+        return fn(self, *args, **kwargs)
+
+    wrapper._repro_decode_loop_only = True          # type: ignore[attr-defined]
+    return wrapper                                  # type: ignore[return-value]
+
+
+def admission_api(fn: F) -> F:
+    """Declare a method in the admission pipeline's call graph (staging /
+    private-buffer API).  Marker only — the static sole-writer rule uses it
+    as a taint root; runtime enforcement rides the pool_mutator hooks."""
+    fn._repro_admission_api = True                  # type: ignore[attr-defined]
+    return fn

@@ -1,0 +1,85 @@
+"""no-jax-under-lock: no jax dispatch lexically inside a lock block.
+
+The engine's bookkeeping lock serializes the decode loop against the
+admission pipeline; a jax call under it turns a microsecond critical
+section into a device-dispatch-length stall for the other thread (and,
+with the XLA CPU client, can deadlock against a donated-buffer wait).
+The discipline (``serve/engine.py``: "jax compute never runs inside it")
+is *lexical* — the one deliberate dynamic exception, ``preempt_batch``'s
+batched device→host copy called from ``_ensure_pages`` under the lock, is
+documented in ``serve/scheduler.py`` with its follow-on.
+
+Flags, inside any ``with <...>._lock/._cv/...*_lock:`` block in a
+``repro.serve`` module:
+
+* calls rooted at ``jax.`` / ``jnp.``;
+* calls to the engine's jitted entry points and known dispatch/DMA
+  methods (``_decode``, ``_extend``, ``_prefill``, ``run_prefill``,
+  ``stage_in``, ``write_prefill``, ``commit_swap_in``, ...).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding, SourceFile, attr_root, iter_functions
+
+RULES = ["no-jax-under-lock"]
+
+_RULE = "no-jax-under-lock"
+_JAX_ROOTS = {"jax", "jnp"}
+# jitted callables + methods that dispatch device compute or DMA
+_DISPATCH_ATTRS = {
+    "_decode", "_extend", "_prefill",
+    "run_prefill", "stage_in", "swap_out_batch", "commit_many",
+    "commit_swap_in", "write_prefill", "write_state", "swap_in", "swap_out",
+    "gather_views", "absorb_decode", "device_put", "block_until_ready",
+}
+_DISPATCH_NAMES = {"gather_views", "absorb_decode", "prefill_logits_token"}
+
+
+def _is_lock_expr(node: ast.AST) -> bool:
+    return isinstance(node, ast.Attribute) and (
+        node.attr in ("_lock", "_cv") or node.attr.endswith("_lock")
+    )
+
+
+def _flag_calls(src: SourceFile, body, func: str) -> list[Finding]:
+    out = []
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute):
+                root = attr_root(fn)
+                if root in _JAX_ROOTS:
+                    out.append(src.finding(
+                        _RULE, node, func,
+                        f"jax call `{ast.unparse(fn)}(...)` lexically inside "
+                        "a lock block — move dispatch outside the critical "
+                        "section"))
+                elif fn.attr in _DISPATCH_ATTRS:
+                    out.append(src.finding(
+                        _RULE, node, func,
+                        f"device dispatch `{ast.unparse(fn)}(...)` lexically "
+                        "inside a lock block"))
+            elif isinstance(fn, ast.Name) and fn.id in _DISPATCH_NAMES:
+                out.append(src.finding(
+                    _RULE, node, func,
+                    f"device dispatch `{fn.id}(...)` lexically inside a "
+                    "lock block"))
+    return out
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    findings: list[Finding] = []
+    for src in files:
+        if src.kind != "serve":
+            continue
+        for qual, _cls, fn in iter_functions(src.tree):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.With) and any(
+                    _is_lock_expr(item.context_expr) for item in node.items
+                ):
+                    findings.extend(_flag_calls(src, node.body, qual))
+    return findings

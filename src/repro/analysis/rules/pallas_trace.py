@@ -1,0 +1,203 @@
+"""pallas-trace-safety: kernel bodies must not branch/loop/cast on tracers.
+
+Inside a Pallas kernel body every ref/operand parameter is a tracer at
+trace time.  Python control flow on a tracer either crashes at trace time
+(``ConcretizationTypeError``) or — worse — silently bakes one branch into
+the compiled kernel.  The sanctioned forms are ``pl.when``, ``jnp.where``,
+``lax``-level loops, and shapes hoisted to static (kw-only) config.
+
+Kernels are discovered two ways: resolved from ``pl.pallas_call(fn, ...)``
+sites (following ``kern = functools.partial(_kernel, ...)`` assignments,
+whose bound parameters become static), and by the repo convention that
+module-level ``*_kernel`` functions in ``repro/kernels/`` are Pallas
+bodies.  Taint seeds are the unbound positional parameters; parameters
+after ``*`` are static config.  ``.shape`` / ``.dtype`` / ``.ndim`` access
+does **not** propagate taint (shapes are static under tracing).
+
+* ``pallas-tracer-branch`` — ``if``/``while``/conditional-expression whose
+  test is tainted (``is``/``is not`` comparisons are exempt: identity on a
+  tracer is a static Python-level check, e.g. ``x if acc is None else ...``);
+* ``pallas-tracer-cast`` — ``float()``/``int()``/``bool()`` on a tainted
+  value (forces concretization);
+* ``pallas-tracer-loop`` — ``for`` iterating a tainted value;
+* ``pallas-shape-loop`` — ``for`` whose iteration count is derived from an
+  operand's ``.shape``: legal, but unrolls at trace time and recompiles on
+  every shape — hoist the extent to static config or suppress with a
+  justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding, SourceFile, attr_root, call_name
+
+RULES = [
+    "pallas-tracer-branch",
+    "pallas-tracer-cast",
+    "pallas-tracer-loop",
+    "pallas-shape-loop",
+]
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim"}
+_CASTS = {"float", "int", "bool"}
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and call_name(node) == "partial" and node.args)
+
+
+def _kernel_sites(tree: ast.Module):
+    """Yield (kernel_name, static_param_positions, static_kwarg_names) for
+    every ``pl.pallas_call(fn, ...)`` in the module, following one level of
+    ``name = functools.partial(_kernel, ...)`` / ``name = _kernel``."""
+    assigns: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            assigns[node.targets[0].id] = node.value
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and call_name(node) == "pallas_call" and node.args):
+            continue
+        expr: ast.AST | None = node.args[0]
+        n_bound, kw_bound = 0, set()
+        for _ in range(4):                       # follow short alias chains
+            if isinstance(expr, ast.Name):
+                if expr.id in assigns:
+                    expr = assigns[expr.id]
+                    continue
+                yield expr.id, n_bound, kw_bound
+                break
+            if _is_partial(expr):
+                n_bound += len(expr.args) - 1
+                kw_bound |= {kw.arg for kw in expr.keywords if kw.arg}
+                expr = expr.args[0]
+                continue
+            break
+
+
+def _seeds(fn: ast.FunctionDef, n_bound: int, kw_bound: set[str]) -> set[str]:
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    return {p for p in pos[n_bound:] if p not in kw_bound}
+
+
+def _tainted(expr: ast.AST, names: set[str]) -> bool:
+    """True if the expression's value depends on a tainted name.  Attribute
+    access of static metadata (``.shape``/``.dtype``/``.ndim``) blocks
+    propagation."""
+    if isinstance(expr, ast.Attribute) and expr.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(expr, ast.Name):
+        return expr.id in names
+    return any(_tainted(c, names) for c in ast.iter_child_nodes(expr))
+
+
+def _mentions_shape_of(expr: ast.AST, names: set[str]) -> bool:
+    return any(
+        isinstance(node, ast.Attribute) and node.attr == "shape"
+        and attr_root(node) in names
+        for node in ast.walk(expr)
+    )
+
+
+def _is_identity_test(test: ast.AST) -> bool:
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+
+
+def _analyze(src: SourceFile, fn: ast.FunctionDef,
+             seeds: set[str]) -> list[Finding]:
+    out: list[Finding] = []
+    tainted = set(seeds)
+
+    def visit(stmts) -> None:
+        for stmt in stmts:
+            # propagate through straight-line assignments first
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = stmt.value
+                if value is not None and _tainted(value, tainted):
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    for t in targets:
+                        elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                        tainted.update(e.id for e in elts
+                                       if isinstance(e, ast.Name))
+            for node in ast.walk(stmt) if not isinstance(
+                    stmt, (ast.If, ast.While, ast.For)) else [stmt]:
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in _CASTS \
+                        and any(_tainted(a, tainted) for a in node.args):
+                    out.append(src.finding(
+                        "pallas-tracer-cast", node, fn.name,
+                        f"`{node.func.id}()` on a traced value forces "
+                        "concretization — keep it symbolic or hoist to "
+                        "static config"))
+                elif isinstance(node, ast.IfExp) \
+                        and _tainted(node.test, tainted) \
+                        and not _is_identity_test(node.test):
+                    out.append(src.finding(
+                        "pallas-tracer-branch", node, fn.name,
+                        "conditional expression on a traced value — use "
+                        "`jnp.where` / `pl.when`"))
+            if isinstance(stmt, (ast.If, ast.While)):
+                if _tainted(stmt.test, tainted) \
+                        and not _is_identity_test(stmt.test):
+                    kind = "if" if isinstance(stmt, ast.If) else "while"
+                    out.append(src.finding(
+                        "pallas-tracer-branch", stmt, fn.name,
+                        f"Python `{kind}` on a traced value — this bakes one "
+                        "branch into the compiled kernel; use `pl.when` / "
+                        "`jnp.where` / `lax.while_loop`"))
+                visit(stmt.body)
+                visit(stmt.orelse)
+            elif isinstance(stmt, ast.For):
+                if _tainted(stmt.iter, tainted):
+                    out.append(src.finding(
+                        "pallas-tracer-loop", stmt, fn.name,
+                        "Python `for` over a traced value — use "
+                        "`lax.fori_loop` or a grid dimension"))
+                elif _mentions_shape_of(stmt.iter, tainted):
+                    out.append(src.finding(
+                        "pallas-shape-loop", stmt, fn.name,
+                        "Python loop whose extent comes from an operand's "
+                        "`.shape` — unrolls at trace time and recompiles "
+                        "per shape; hoist the extent to static config"))
+                visit(stmt.body)
+                visit(stmt.orelse)
+            else:
+                for child in (getattr(stmt, "body", []) or []):
+                    if isinstance(child, ast.stmt):
+                        visit([child])
+    visit(fn.body)
+    return out
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    findings: list[Finding] = []
+    for src in files:
+        if src.kind != "kernels":
+            continue
+        fns = {node.name: node for node in ast.walk(src.tree)
+               if isinstance(node, ast.FunctionDef)}
+        seen: set[tuple[str, frozenset[str]]] = set()
+        targets: list[tuple[ast.FunctionDef, set[str]]] = []
+        for name, n_bound, kw_bound in _kernel_sites(src.tree):
+            if name in fns:
+                fn = fns[name]
+                seeds = _seeds(fn, n_bound, kw_bound)
+                key = (name, frozenset(seeds))
+                if key not in seen:
+                    seen.add(key)
+                    targets.append((fn, seeds))
+        for name, fn in fns.items():
+            if name.endswith("_kernel"):
+                seeds = _seeds(fn, 0, set())
+                key = (name, frozenset(seeds))
+                if key not in seen:
+                    seen.add(key)
+                    targets.append((fn, seeds))
+        for fn, seeds in targets:
+            findings.extend(_analyze(src, fn, seeds))
+    return findings

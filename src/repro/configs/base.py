@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional
-
 import jax.numpy as jnp
 
 
@@ -106,11 +104,11 @@ class ArchConfig:
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.001
     # family extensions
-    mla: Optional[MLAConfig] = None
-    ssm: Optional[SSMConfig] = None
-    rglru: Optional[RGLRUConfig] = None
-    encoder: Optional[EncoderConfig] = None
-    vision: Optional[VisionStubConfig] = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    encoder: EncoderConfig | None = None
+    vision: VisionStubConfig | None = None
     # numerics / execution
     dtype: str = "bfloat16"
     attn_chunk: int = 1024

@@ -17,7 +17,7 @@ All paths are verified against each other in tests.
 from __future__ import annotations
 
 import math
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Sequence
+from collections.abc import Sequence
 
 from .tiling import ConvLayerSpec, Tile4D, TilePerf, optimize_tile, tile_spm_bytes
 

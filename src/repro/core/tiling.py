@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Iterator
+from collections.abc import Iterator
 
 # ---------------------------------------------------------------------------
 # Layer and tile descriptors
@@ -255,7 +255,7 @@ def choose_matmul_blocks(
     n: int,
     k: int,
     dtype_bytes: int = 4,
-    budget: VMemBudget = VMemBudget(),
+    budget: VMemBudget | None = None,
 ) -> tuple[int, int, int]:
     """Pick (bm, bn, bk) for a blocked matmul so that the double-buffered
     working set fits VMEM and MXU dims are 128-aligned.
@@ -265,6 +265,7 @@ def choose_matmul_blocks(
     blocks; shrink bk first (partial-computation accumulation over K, the
     paper's T_Ci mechanism) when capacity binds.
     """
+    budget = budget or VMemBudget()
     bm = min(_round_up(m, SUBLANE), 512)
     bn = min(_round_up(n, LANE), 1024)
     bk = min(_round_up(k, LANE), 2048)
@@ -290,11 +291,12 @@ def choose_matmul_blocks(
 def choose_conv_blocks(
     l: ConvLayerSpec,
     dtype_bytes: int = 4,
-    budget: VMemBudget = VMemBudget(),
+    budget: VMemBudget | None = None,
 ) -> Tile4D:
     """Pick a 4D tile for the Pallas conv kernel: channels padded to the lane
     width, spatial extent grown until VMEM binds (the SMC optimizer with TPU
     constants)."""
+    budget = budget or VMemBudget()
     tci = min(_round_up(l.ci, LANE), l.ci if l.ci % LANE == 0 else _round_up(l.ci, LANE))
     tci = min(tci, 512)
     tco = min(_round_up(l.co, LANE), 512)

@@ -12,7 +12,7 @@ freshest report (dead).  Clocks are injectable for tests.
 from __future__ import annotations
 
 import time
-from typing import Iterable
+from collections.abc import Iterable
 
 
 class FaultInjector:

@@ -17,7 +17,10 @@ from jax.experimental.pallas import tpu as pltpu
 def _gd_kernel(c_ref, d_ref, o_ref):
     d = d_ref[...]                                  # (J, bm)
     acc = jnp.zeros((1, d.shape[1]), jnp.float32)
-    for j in range(d.shape[0]):                     # J is small & static
+    # repro-lint: skip[pallas-shape-loop] J = a handful of derivative
+    # streams, fixed per call site — the unroll is the point (Σ_j C_j·W^(j)
+    # with one SMEM coefficient per term)
+    for j in range(d.shape[0]):  # repro-lint: skip[pallas-shape-loop]
         acc += c_ref[j, 0] * d[j][None].astype(jnp.float32)
     o_ref[...] = acc.astype(o_ref.dtype)
 

@@ -54,10 +54,7 @@ def _causal_conv(x, w, b, state=None):
     state: (B, K-1, C) trailing context for decode; returns (y, new_state).
     """
     k = w.shape[0]
-    if state is None:
-        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
-    else:
-        pad = state
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) if state is None else state
     xp = jnp.concatenate([pad, x], axis=1)
     y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
     new_state = xp[:, -(k - 1):] if k > 1 else pad

@@ -594,7 +594,7 @@ class DecoderLM:
                 )
             else:
                 for r in range(reps):
-                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    pslice = jax.tree.map(lambda a, r=r: a[r], params[f"seg{si}"])
                     (x, aux_total), _ = wrapped((x, aux_total), pslice)
         logits = self._head(params, x, rules)
         return logits, aux_total
@@ -652,7 +652,7 @@ class DecoderLM:
             else:
                 slices = []
                 for r in range(reps):
-                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
+                    pslice = jax.tree.map(lambda a, r=r: a[r], params[f"seg{si}"])
                     x, c = body(x, pslice)
                     slices.append(c)
                 cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
@@ -718,8 +718,8 @@ class DecoderLM:
             else:
                 slices = []
                 for r in range(reps):
-                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
-                    cslice = jax.tree.map(lambda a: a[r], cache[si])
+                    pslice = jax.tree.map(lambda a, r=r: a[r], params[f"seg{si}"])
+                    cslice = jax.tree.map(lambda a, r=r: a[r], cache[si])
                     x, c = body(x, (pslice, cslice))
                     slices.append(c)
                 new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
@@ -766,8 +766,8 @@ class DecoderLM:
             else:
                 slices = []
                 for r in range(reps):
-                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
-                    cslice = jax.tree.map(lambda a: a[r], pools[si])
+                    pslice = jax.tree.map(lambda a, r=r: a[r], params[f"seg{si}"])
+                    cslice = jax.tree.map(lambda a, r=r: a[r], pools[si])
                     x, c = body(x, (pslice, cslice))
                     slices.append(c)
                 new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
@@ -811,8 +811,8 @@ class DecoderLM:
             else:
                 slices = []
                 for r in range(reps):
-                    pslice = jax.tree.map(lambda a: a[r], params[f"seg{si}"])
-                    cslice = jax.tree.map(lambda a: a[r], cache[si])
+                    pslice = jax.tree.map(lambda a, r=r: a[r], params[f"seg{si}"])
+                    cslice = jax.tree.map(lambda a, r=r: a[r], cache[si])
                     x, c = body(x, (pslice, cslice))
                     slices.append(c)
                 new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
@@ -832,7 +832,8 @@ class DecoderLM:
             else:
                 out.append(
                     jax.tree.map(
-                        lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype),
+                        lambda s, reps=reps: jax.ShapeDtypeStruct(
+                            (reps,) + s.shape, s.dtype),
                         tree,
                     )
                 )

@@ -9,7 +9,8 @@ fit the per-device HBM budget (recorded in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -124,7 +125,7 @@ def state_axes_like(param_axes_tree, state):
         return jax.tree.map(lambda _ , ax=None: ax, sub)
 
     out = {}
-    for k, v in state.items():
+    for k in state:
         if k == "count":
             out[k] = ()
         else:

@@ -38,6 +38,9 @@ import threading
 
 import jax.numpy as jnp
 
+from repro.analysis import sanitizer
+from repro.analysis.ownership import admission_api
+
 
 class AdmissionPipeline:
     """Prefill/restore pipeline feeding a ``ServeEngine``'s ready queue."""
@@ -53,6 +56,7 @@ class AdmissionPipeline:
 
     # -- shared work items (compute/DMA outside the lock) -------------------
 
+    @admission_api
     def _stage(self, st) -> None:
         """Host→device DMA for a swapped-out request, then hand to ready.
         Touches the host buffers and fresh device arrays only — never the
@@ -68,6 +72,7 @@ class AdmissionPipeline:
             self.stats["restores_staged"] += 1
             eng._cv.notify_all()
 
+    @admission_api
     def _chunk(self, st, chunk: int) -> None:
         """One prefill work unit (a chunk, or the whole prompt when
         chunking is off) into the request's private cache tree."""
@@ -84,6 +89,7 @@ class AdmissionPipeline:
 
     # -- sync mode ----------------------------------------------------------
 
+    @admission_api
     def pump(self, budget: int) -> bool:
         """Run the pipeline inline for one engine step (sync mode): admit
         under the token budget, stage every pending restore, advance each
@@ -140,6 +146,7 @@ class AdmissionPipeline:
             t.join(timeout=10)
         self._thread = None
 
+    @admission_api
     def _select(self):
         """Pick the next work item, under the engine lock.  Restores first
         (pure DMA, unblocks a decode lane soonest), then in-flight prefill
@@ -159,8 +166,13 @@ class AdmissionPipeline:
             return ("chunk", st, s.chunk_for(st))
         return None
 
+    @admission_api
     def _worker(self) -> None:
         eng = self.engine
+        # sanitizer mode: this thread may never mutate pools/block tables or
+        # enter a @decode_loop_only method (no-op when disabled)
+        if sanitizer.enabled():
+            sanitizer.register_admission_thread(eng)
         try:
             while True:
                 with eng._lock:
@@ -180,10 +192,15 @@ class AdmissionPipeline:
                     self._stage(st)
                 else:
                     self._chunk(st, chunk)
-        except BaseException as e:       # surface in the decode loop
+        except BaseException as e:  # noqa: B036 - surface in the decode loop
             with eng._lock:
                 self.error = e
                 eng._cv.notify_all()
+        finally:
+            # thread idents are reused by the OS — a dead worker's ident
+            # must not taint a future decode thread
+            if sanitizer.enabled():
+                sanitizer.unregister_admission_thread(eng)
 
 
 def prefill_logits_token(last_logits) -> int:

@@ -29,6 +29,7 @@ The greedy/temperature sampling API (``Request``, ``submit``, ``step``,
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -37,6 +38,13 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis import sanitizer
+from repro.analysis.ownership import (
+    admission_api,
+    decode_loop_only,
+    pool_mutator,
+)
 
 from .admission import AdmissionPipeline, prefill_logits_token
 from .paged_cache import (
@@ -188,6 +196,7 @@ class ServeEngine:
         # (ready-queue push, page free, submit) so neither loop spins.
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
+        sanitizer.register_engine(self)
         self.pipeline = AdmissionPipeline(self, ecfg.async_prefill)
         self._idle_since: float | None = None
         self._idle_pipe_mark = -1
@@ -200,10 +209,8 @@ class ServeEngine:
         )
 
     def __del__(self):
-        try:
+        with contextlib.suppress(Exception):
             self.pipeline.shutdown()
-        except Exception:
-            pass
 
     # -- jitted pieces --------------------------------------------------------
 
@@ -252,6 +259,7 @@ class ServeEngine:
 
     # -- prefill (called by the admission pipeline, OUTSIDE the lock) ---------
 
+    @admission_api
     def _fresh_prefill_tree(self):
         """Private single-request cache tree a chunked prefill computes
         into: seq leaves at full per-lane capacity (one jit signature per
@@ -263,6 +271,7 @@ class ServeEngine:
             self.model.cache_specs(1, self.cache.capacity),
         )
 
+    @admission_api
     def run_prefill(self, st, chunk: int) -> bool:
         """Advance ``st``'s prefill by one work unit (a chunk, or the whole
         prompt when chunking is off).  Pure compute on private state;
@@ -285,6 +294,7 @@ class ServeEngine:
         st.last_logits = logits[0, -1]
         return st.remaining_prefill == 0
 
+    @admission_api
     def sample_prefill_token(self, st) -> int:
         """The prefill's one host-blocking sync — on the pipeline's thread
         in async mode, so it never stalls a decode step."""
@@ -294,6 +304,7 @@ class ServeEngine:
             return int(st.req.out_tokens[-1])
         return prefill_logits_token(st.last_logits)
 
+    @admission_api
     def finish_prefill(self, st, tok: int) -> bool:
         """Queue bookkeeping after a finished prefill (under the lock):
         early EOS / single-token requests retire without ever taking a
@@ -315,10 +326,17 @@ class ServeEngine:
         self.sched.to_ready(st)
         return False
 
+    @admission_api
     def _retire(self, st):
+        """Retirement bookkeeping shared by both threads: queues, free
+        lists, held buffers — never lane or pool state (a decode-retired
+        request goes through ``_retire_lane`` first, which releases those;
+        a prefill-retired one never owned them)."""
         with self._lock:
+            assert st.lane < 0, "retiring a laned request: use _retire_lane"
             st.req.done = True
             self.cache.allocator.free(st.pages)
+            sanitizer.note_release(st)
             st.pages = []
             if st.swap_handle is not None:
                 self.cache.host_free(st.swap_handle)
@@ -330,16 +348,24 @@ class ServeEngine:
             st.prefill_cache = st.state_cache = st.staged = None
             st.last_logits = None
             self.sched.retire_uid(st.req.uid)
-            if st.lane >= 0:
-                self.cache.clear_lane(st.lane)
-                self.sched.running.pop(st.lane, None)
-                st.lane = -1
             st.phase = "done"
             self.completed.append(st.req)
             self._cv.notify_all()        # freed pages: admissions may resume
 
+    @decode_loop_only
+    def _retire_lane(self, st):
+        """Decode-loop half of retirement: release the lane and its block-
+        table row (pool state only this thread may touch), then the shared
+        bookkeeping."""
+        with self._lock:
+            self.cache.clear_lane(st.lane)
+            self.sched.running.pop(st.lane, None)
+            st.lane = -1
+        self._retire(st)
+
     # -- lane assignment (decode loop only) ------------------------------------
 
+    @decode_loop_only
     def _fill_lanes(self) -> bool:
         """Drain the ready queue into free decode lanes and fold the
         pipeline's private results into the pools (the decode loop is the
@@ -359,6 +385,9 @@ class ServeEngine:
             if take:
                 self._cv.notify_all()    # ready drained: backpressure lifts
         for st in take:
+            # use-after-free/ABA check: every page id this request holds is
+            # live and still of the generation granted at admission
+            sanitizer.verify_grant(st, self.cache.allocator)
             self.cache.assign_lane(st.lane, st.pages)
             if st.staged is not None:                 # swap-in restore
                 self.cache.commit_swap_in(st.staged, st.pages)
@@ -374,6 +403,7 @@ class ServeEngine:
 
     # -- decode ----------------------------------------------------------------
 
+    @decode_loop_only
     def _ensure_pages(self):
         """Every running lane needs a page slot for its next write position.
 
@@ -432,10 +462,13 @@ class ServeEngine:
                     page = hold.pop() if hold else cache.allocator.alloc(1)[0]
                     cache.extend_lane(lane, page, len(st.pages))
                     st.pages.append(page)
+                    sanitizer.note_grant(st, [page], cache.allocator)
                     n -= 1
             if hold:
                 cache.allocator.free(hold)
 
+    @decode_loop_only
+    @pool_mutator("pools")
     def _decode_lanes(self, key):
         s, b = self.sched, self.ecfg.batch_slots
         tokens = np.zeros((b, 1), np.int32)
@@ -475,13 +508,14 @@ class ServeEngine:
                 # the dense engine's truncation exactly
                 or st.length >= self.ecfg.max_len - 1
             ):
-                self._retire(st)
+                self._retire_lane(st)
         with self._lock:
             self.stats["decode_tokens"] += done
             self.stats["lane_step_sum"] += n_active
 
     # -- step loop -------------------------------------------------------------
 
+    @decode_loop_only
     def step(self, key=None) -> bool:
         """One decode-loop round: (sync mode only: pump the admission
         pipeline) → drain ready into lanes → one batched decode step.
@@ -552,6 +586,7 @@ class ServeEngine:
                 self._cv.wait(timeout=0.01)
         return True
 
+    @decode_loop_only
     def run(self, key=None) -> list[Request]:
         done_mark = len(self.completed)
         while self.load:

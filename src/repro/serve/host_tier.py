@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.ownership import admission_api, pool_mutator
+
 from .paged_cache import PageAllocator, _is_seq
 
 
@@ -113,6 +115,7 @@ class HostPagePool:
 
     # -- swap-out ----------------------------------------------------------
 
+    @pool_mutator("free_list")
     def reserve(self, handle: SwapHandle | None, n_logical: int):
         """Bookkeeping half of a swap-out: grow the handle's host pages to
         ``n_logical`` and return ``(handle, dirty_logical_indices)``, or
@@ -132,6 +135,7 @@ class HostPagePool:
         self._bump(dirty_pages_skipped=handle.clean_pages)
         return handle, dirty
 
+    @pool_mutator("pools")
     def commit_many(self, device_pools, items) -> None:
         """DMA half of a swap-out for a whole victim set: ``items`` is a
         list of ``(handle, device_pages, dirty, lane, length)``.  All
@@ -142,7 +146,7 @@ class HostPagePool:
         if not items:
             return
         dev_flat, splits, total = [], [], 0
-        for handle, device_pages, dirty, lane, length in items:
+        for _handle, device_pages, dirty, _lane, _length in items:
             dev_flat.extend(device_pages[i] for i in dirty)
             total += len(dirty)
             splits.append(total)
@@ -171,7 +175,7 @@ class HostPagePool:
                                                   device_pools)
         if has_state:
             self._bump(device_gets=len(has_state))
-        for vi, (handle, device_pages, dirty, lane, length) in enumerate(items):
+        for vi, (handle, device_pages, dirty, _lane, length) in enumerate(items):
             if has_state:
                 # (layers, 1, *tail): the shape write_state expects back
                 handle.state = jax.tree_util.tree_map_with_path(
@@ -189,6 +193,7 @@ class HostPagePool:
                                      len(device_pages))
             self._bump(swap_outs=1, pages_out=len(dirty))
 
+    @pool_mutator("pools")
     def swap_out(self, device_pools, device_pages: list[int], lane: int,
                  length: int, handle: SwapHandle | None = None):
         """Single-victim swap-out (reserve + commit_many of one).  Returns
@@ -204,6 +209,7 @@ class HostPagePool:
 
     # -- swap-in -----------------------------------------------------------
 
+    @admission_api
     def stage_in(self, handle: SwapHandle, shardings=None):
         """Host→device DMA half of a restore: stage every host page of
         ``handle`` (and its captured state) onto the device WITHOUT touching
@@ -231,6 +237,7 @@ class HostPagePool:
                  if handle.state is not None else None)
         return staged, state
 
+    @pool_mutator("pools")
     def swap_in(self, device_pools, handle: SwapHandle,
                 device_pages: list[int], shardings=None):
         """Single-shot restore (stage_in + scatter): returns
@@ -247,6 +254,7 @@ class HostPagePool:
         pools = jax.tree_util.tree_map_with_path(leaf, device_pools, staged)
         return pools, state
 
+    @pool_mutator("free_list")
     def free(self, handle: SwapHandle | None) -> None:
         """Release a request's host pages (retire, or recompute fallback
         invalidating the copy)."""

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.ownership import admission_api, pool_mutator
 from repro.models.common import SEQ_CACHE_KEYS, cache_leaf_key
 
 
@@ -58,6 +59,7 @@ class PageAllocator:
     def n_free(self) -> int:
         return len(self._free)
 
+    @pool_mutator("free_list")
     def alloc(self, n: int) -> list[int] | None:
         """n pages, or None (and no allocation) if the pool can't cover it."""
         if n > len(self._free):
@@ -66,6 +68,7 @@ class PageAllocator:
         self._free_set.difference_update(pages)
         return pages
 
+    @pool_mutator("free_list")
     def free(self, pages: list[int]) -> None:
         for p in pages:
             assert 0 <= p < self.n_pages
@@ -206,21 +209,40 @@ class PagedKVCache:
     def alloc(self, n_tokens: int) -> list[int] | None:
         return self.allocator.alloc(self.pages_for(n_tokens))
 
+    @pool_mutator("pools")
     def assign_lane(self, lane: int, pages: list[int]) -> None:
         self.block_tables[lane] = -1
         self.block_tables[lane, : len(pages)] = pages
 
+    @pool_mutator("pools")
     def extend_lane(self, lane: int, page: int, n_owned: int) -> None:
         self.block_tables[lane, n_owned] = page
 
+    @pool_mutator("pools")
     def clear_lane(self, lane: int) -> None:
         self.block_tables[lane] = -1
 
     def occupancy(self) -> float:
         return 1.0 - self.allocator.n_free / self.n_pages
 
+    def check_invariant(self) -> None:
+        """Pool/table consistency: the free lists are sane, no physical page
+        is mapped by two lanes, and no mapped page sits in the free list.
+        Cheap (one pass over a lanes x pages_per_lane int table); the
+        sanitizer runs it after every mutating op, tests at checkpoints."""
+        self.allocator.check_invariant()
+        mapped = self.block_tables[self.block_tables >= 0].tolist()
+        assert len(set(mapped)) == len(mapped), (
+            "page mapped by two lanes (block-table aliasing)"
+        )
+        stale = set(mapped) & self.allocator._free_set
+        assert not stale, f"free pages still mapped by a lane: {sorted(stale)}"
+        if self.host is not None:
+            self.host.allocator.check_invariant()
+
     # -- eager (per-request) writes ----------------------------------------
 
+    @pool_mutator("pools")
     def write_prefill(self, pages: list[int], cache, lane: int | None = None):
         """Scatter a prefill cache (leaves (layers, 1, s, *t)) into
         ``pages``; state leaves go to ``lane``'s row when given.  Seq leaves
@@ -248,6 +270,7 @@ class PagedKVCache:
 
         self.pools = jax.tree_util.tree_map_with_path(leaf, self.pools, cache)
 
+    @pool_mutator("pools")
     def write_state(self, lane: int, cache) -> None:
         """Copy only the recurrent-state leaves of a held prefill cache into
         ``lane``'s row (the lane was not known at prefill time)."""
@@ -278,6 +301,7 @@ class PagedKVCache:
             return None
         return self.host.reserve(st.swap_handle, len(st.pages))
 
+    @pool_mutator("pools")
     def swap_out_batch(self, swap_items) -> None:
         """DMA half for a victim set: ``swap_items`` is ``[(st, dirty)]``
         with host pages already reserved.  ONE device→host read per cache
@@ -287,6 +311,7 @@ class PagedKVCache:
             for st, dirty in swap_items
         ])
 
+    @pool_mutator("pools")
     def swap_out(self, pages: list[int], lane: int, length: int,
                  handle=None):
         """Copy a victim's pages + lane state to the host tier.  Returns a
@@ -296,12 +321,14 @@ class PagedKVCache:
             return None
         return self.host.swap_out(self.pools, pages, lane, length, handle)
 
+    @admission_api
     def stage_in(self, handle):
         """Host→device staging for a restore — pure DMA, pools untouched
         (safe on the admission pipeline thread).  Returns
         ``(staged_tree, state_tree)`` for ``commit_swap_in``."""
         return self.host.stage_in(handle, self.host_shardings)
 
+    @pool_mutator("pools")
     def commit_swap_in(self, staged, pages: list[int]) -> None:
         """Scatter a staged restore into freshly allocated device ``pages``
         (decode-loop-owned: the only thread that writes the pools).
@@ -319,6 +346,7 @@ class PagedKVCache:
             leaf, self.pools, staged
         )
 
+    @pool_mutator("pools")
     def swap_in(self, handle, pages: list[int]):
         """Restore a swapped request into freshly allocated device ``pages``;
         returns the captured recurrent-state tree (None for stateless

@@ -50,9 +50,12 @@ starving it would livelock.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
+
+from repro.analysis import sanitizer
+from repro.analysis.ownership import admission_api, decode_loop_only
+from repro.analysis.phases import check_phase_edge
 
 
 @dataclass
@@ -99,6 +102,18 @@ class RequestState:
     @property
     def remaining_prefill(self) -> int:
         return len(self.resume_tokens) - self.prefilled
+
+    def __setattr__(self, name: str, value) -> None:
+        # sanitizer mode: validate every phase write against the declared
+        # edge set (repro.analysis.phases) — the runtime twin of the static
+        # phase-transitions lint rule
+        if name == "phase" and sanitizer.enabled():
+            err = check_phase_edge(getattr(self, "phase", None), value)
+            if err is not None:
+                uid = getattr(getattr(self, "req", None), "uid", "?")
+                raise sanitizer.SanitizerError(
+                    f"request uid={uid}: {err}")
+        object.__setattr__(self, name, value)
 
 
 class Scheduler:
@@ -162,7 +177,8 @@ class Scheduler:
                                   for s in self.waiting]))
         return 0
 
-    def admit_next(self, cache) -> Optional[RequestState]:
+    @admission_api
+    def admit_next(self, cache) -> RequestState | None:
         """Reserve pages for the next admissible waiting request and move it
         to ``admitting`` (phase ``prefill`` or ``restore``).  Returns None
         when nothing can be admitted: queue empty, in-flight bound hit, or
@@ -191,6 +207,7 @@ class Scheduler:
                 return None
             st = self.waiting.pop(i)
             st.pages = pages
+            sanitizer.note_grant(st, pages, cache.allocator)
             st.phase = "restore"
         else:
             pages = cache.alloc(len(nxt.resume_tokens) + 1)
@@ -198,6 +215,7 @@ class Scheduler:
                 return None
             st = self.waiting.pop(i)
             st.pages = pages
+            sanitizer.note_grant(st, pages, cache.allocator)
             st.prefilled = 0
             st.phase = "prefill"
         self.admitting.append(st)
@@ -217,6 +235,7 @@ class Scheduler:
                 budget -= min(self.chunk_for(st), budget)
         return admitted
 
+    @admission_api
     def to_ready(self, st: RequestState) -> None:
         """Admission pipeline hand-off: prefill/restore finished."""
         self.admitting.remove(st)
@@ -231,7 +250,7 @@ class Scheduler:
     # -- preemption ---------------------------------------------------------
 
     def pick_victim(self, exclude_lane: int = -1,
-                    exclude=()) -> Optional[RequestState]:
+                    exclude=()) -> RequestState | None:
         """Longest-running request (most generated tokens); prefer not to
         evict ``exclude_lane`` (the lane asking for the page) and never one
         of ``exclude`` (already-picked victims)."""
@@ -257,6 +276,7 @@ class Scheduler:
         recompute_tokens = len(st.req.prompt) + len(st.req.out_tokens) - 1
         return swap_cost < recompute_tokens
 
+    @decode_loop_only
     def preempt_batch(self, victims: list[RequestState], cache) -> list[str]:
         """Evict a victim set by the configured policy, with ONE device→host
         copy per cache leaf for all swap-mode victims (``swap_out_batch``)
@@ -287,8 +307,9 @@ class Scheduler:
             cache.swap_out_batch(swap_items)
         modes = []
         for st, mode in plan:
-            cache.allocator.free(st.pages)
             cache.clear_lane(st.lane)
+            cache.allocator.free(st.pages)
+            sanitizer.note_release(st)
             del self.running[st.lane]
             st.pages = []
             st.lane = -1
@@ -319,6 +340,7 @@ class Scheduler:
             modes.append(mode)
         return modes
 
+    @decode_loop_only
     def preempt(self, st: RequestState, cache) -> str:
         """Single-victim eviction (the batch of one)."""
         return self.preempt_batch([st], cache)[0]

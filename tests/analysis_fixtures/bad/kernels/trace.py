@@ -1,0 +1,12 @@
+"""Negative fixture: every Pallas trace-safety violation class."""
+
+
+def _bad_kernel(x_ref, o_ref, *, blk):
+    x = x_ref[...]
+    if x.sum() > 0:                         # BAD: Python branch on a tracer
+        o_ref[...] = x
+    v = float(x[0])                         # BAD: concretizing cast
+    for t in x:                             # BAD: Python loop over a tracer
+        o_ref[0] = t
+    for i in range(x.shape[0]):             # BAD: shape-dependent unroll
+        o_ref[i] = x[i] + v

@@ -1,0 +1,14 @@
+"""Negative fixture: jax dispatch lexically under the engine lock."""
+import jax.numpy as jnp
+
+
+class Engine:
+    def step(self):
+        with self._lock:
+            logits = jnp.ones((2, 2))               # BAD: jax under lock
+            self.cache.write_prefill([0], logits)   # BAD: dispatch under lock
+        return logits
+
+    def wait_path(self):
+        with self._cv:
+            self.cache.stage_in(None)               # BAD: DMA under lock

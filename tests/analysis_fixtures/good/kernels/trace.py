@@ -1,0 +1,23 @@
+"""Positive fixture: the sanctioned kernel idioms — static kw-only config
+branches, identity tests, static extents, metadata access."""
+import functools
+
+from jax.experimental import pallas as pl
+
+
+def _good_kernel(x_ref, o_ref, *, causal, window):
+    x = x_ref[...]
+    if causal:                              # static kw-only config — fine
+        x = x * 2
+    if window is not None:                  # identity test — fine
+        x = x + window
+    n = x.shape[0]                          # metadata access — fine
+    acc = None
+    for j in range(4):                      # static extent — fine
+        acc = x if acc is None else acc + x     # identity ternary — fine
+    o_ref[...] = acc * n
+
+
+def run(x):
+    kern = functools.partial(_good_kernel, causal=True, window=None)
+    return pl.pallas_call(kern, out_shape=None)(x)

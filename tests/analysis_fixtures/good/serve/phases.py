@@ -1,0 +1,21 @@
+"""Positive fixture: every declared writer assigning its declared phases."""
+
+
+class Scheduler:
+    def admit_next(self, st):
+        st.phase = "prefill"
+        st.phase = "restore"
+
+    def to_ready(self, st):
+        st.phase = "ready"
+
+    def preempt_batch(self, st):
+        st.phase = "waiting"
+
+
+class ServeEngine:
+    def _fill_lanes(self, st):
+        st.phase = "running"
+
+    def _retire(self, st):
+        st.phase = "done"

@@ -1,0 +1,307 @@
+"""repro-lint + sanitizer: the analysis subsystem's own test suite.
+
+Three layers:
+
+* **fixture corpus** — every rule id fires on ``tests/analysis_fixtures/
+  bad/`` and none fire on ``good/`` (the good files are shaped like the
+  real serve/kernels idiom, so they double as false-positive regressions);
+* **meta** — the shipped ``src/`` tree lints clean against the committed
+  baseline, both through the API and through the CLI entry point CI runs;
+* **runtime** — each sanitizer invariant (thread ownership, lock
+  discipline, double-free / use-after-free / stale-page-ABA, phase edges)
+  catches a seeded violation and stays quiet on the legal path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.analysis.lint import DEFAULT_BASELINE, lint_paths, run_rules
+from repro.analysis.ownership import decode_loop_only, pool_mutator
+from repro.analysis.phases import PHASE_EDGES, PHASE_WRITERS, check_phase_edge
+from repro.analysis.rules import ALL_RULE_IDS
+from repro.serve.paged_cache import PageAllocator
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+SRC = REPO / "src"
+
+
+def _lint_fixture_dir(sub: str):
+    # SourceFile directly: the default file iterator deliberately skips
+    # analysis_fixtures so the corpus never pollutes a real lint run
+    from repro.analysis.findings import SourceFile
+
+    paths = sorted((FIXTURES / sub).rglob("*.py"))
+    assert paths, f"fixture dir {sub} is empty"
+    return run_rules([SourceFile(p) for p in paths])
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus
+# ---------------------------------------------------------------------------
+
+
+def test_every_rule_fires_on_bad_fixtures():
+    findings = _lint_fixture_dir("bad")
+    fired = {f.rule for f in findings}
+    assert fired == set(ALL_RULE_IDS), (
+        f"missing: {set(ALL_RULE_IDS) - fired}, "
+        f"unexpected: {fired - set(ALL_RULE_IDS)}"
+    )
+
+
+def test_good_fixtures_lint_clean():
+    findings = _lint_fixture_dir("good")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_inline_suppression_covers_finding(tmp_path):
+    bad = FIXTURES / "bad" / "kernels" / "trace.py"
+    kdir = tmp_path / "kernels"
+    kdir.mkdir()
+    text = bad.read_text().replace(
+        "    if x.sum() > 0:",
+        "    if x.sum() > 0:  # repro-lint: skip[pallas-tracer-branch] test",
+    )
+    (kdir / "trace.py").write_text(text)
+    findings, errors = lint_paths([kdir], baseline=None)
+    assert not errors
+    assert "pallas-tracer-branch" not in {f.rule for f in findings}
+    assert {f.rule for f in findings} >= {"pallas-tracer-cast",
+                                          "pallas-tracer-loop"}
+
+
+def test_baseline_suppresses_by_fingerprint(tmp_path):
+    sdir = tmp_path / "serve"
+    sdir.mkdir()
+    (sdir / "mod.py").write_text(
+        "class C:\n    def f(self):\n        self.pools = 1\n")
+    findings, _ = lint_paths([sdir], baseline=None)
+    assert len(findings) == 1
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({
+        "version": 1,
+        "suppressions": [{"fingerprint": findings[0].fingerprint()}],
+    }))
+    again, _ = lint_paths([sdir], baseline=base)
+    assert again == []
+
+
+# ---------------------------------------------------------------------------
+# meta: the shipped tree is clean
+# ---------------------------------------------------------------------------
+
+
+def test_shipped_tree_lints_clean_api():
+    findings, errors = lint_paths([SRC], baseline=DEFAULT_BASELINE, root=REPO)
+    assert not errors, errors
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_shipped_tree_lints_clean_cli():
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "src/"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_lists_all_rules():
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--list-rules"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=60,
+    )
+    assert proc.returncode == 0
+    assert set(proc.stdout.split()) == set(ALL_RULE_IDS)
+
+
+def test_phase_tables_consistent():
+    # every declared writer's phase appears in the edge set and vice versa
+    assert {new for _old, new in PHASE_EDGES} == set(PHASE_WRITERS)
+    assert check_phase_edge("waiting", "prefill") is None
+    assert check_phase_edge("ready", "waiting") is not None
+    assert check_phase_edge("waiting", "zombie") is not None
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def sanitize():
+    was = sanitizer.enabled()
+    sanitizer.enable()
+    yield
+    if not was:
+        sanitizer.disable()
+
+
+class _MiniCache:
+    """Smallest object graph the ownership decorators operate on."""
+
+    def __init__(self, n_pages=8):
+        self.pools = 0
+        self.allocator = PageAllocator(n_pages)
+
+    @pool_mutator("pools")
+    def bump(self):
+        self.pools += 1
+
+    @pool_mutator("pools")
+    def touch(self, pages):
+        pass
+
+
+class _MiniEngine:
+    def __init__(self):
+        self.cache = _MiniCache()
+        self._lock = threading.RLock()
+
+    @decode_loop_only
+    def decode_step(self):
+        pass
+
+
+def _on_thread(fn):
+    """Run ``fn`` on a fresh thread, re-raising anything it raises."""
+    box = []
+
+    def runner():
+        try:
+            fn()
+        except BaseException as e:           # noqa: B036 - relay to caller
+            box.append(e)
+
+    t = threading.Thread(target=runner)
+    t.start()
+    t.join()
+    if box:
+        raise box[0]
+
+
+def test_sanitizer_catches_pool_write_from_admission_thread(sanitize):
+    eng = _MiniEngine()
+    sanitizer.register_engine(eng)
+    eng.cache.bump()                         # main thread binds as the writer
+
+    def admission():
+        sanitizer.register_admission_thread(eng)
+        try:
+            eng.cache.bump()
+        finally:
+            sanitizer.unregister_admission_thread(eng)
+
+    with pytest.raises(sanitizer.SanitizerError, match="admission"):
+        _on_thread(admission)
+
+
+def test_sanitizer_catches_second_pool_writer_thread(sanitize):
+    eng = _MiniEngine()
+    sanitizer.register_engine(eng)
+    eng.cache.bump()                         # main thread binds as the writer
+    with pytest.raises(sanitizer.SanitizerError, match="two threads"):
+        _on_thread(eng.cache.bump)
+
+
+def test_sanitizer_catches_decode_only_on_admission_thread(sanitize):
+    eng = _MiniEngine()
+    sanitizer.register_engine(eng)
+
+    def admission():
+        sanitizer.register_admission_thread(eng)
+        try:
+            eng.decode_step()
+        finally:
+            sanitizer.unregister_admission_thread(eng)
+
+    with pytest.raises(sanitizer.SanitizerError, match="decode_loop_only"):
+        _on_thread(admission)
+
+
+def test_sanitizer_enforces_free_list_lock(sanitize):
+    eng = _MiniEngine()
+    sanitizer.register_engine(eng)
+    with pytest.raises(sanitizer.SanitizerError, match="lock"):
+        eng.cache.allocator.alloc(1)
+    with eng._lock:
+        pages = eng.cache.allocator.alloc(1)
+        assert pages is not None
+        eng.cache.allocator.free(pages)
+
+
+def test_sanitizer_catches_double_free(sanitize):
+    alloc = PageAllocator(4)                 # standalone: no lock registered
+    pages = alloc.alloc(2)
+    alloc.free(pages)
+    with pytest.raises(sanitizer.SanitizerError, match="double free"):
+        alloc.free([pages[0]])
+
+
+def test_sanitizer_catches_use_after_free(sanitize):
+    cache = _MiniCache()
+    pages = cache.allocator.alloc(2)
+    cache.allocator.free(pages)
+    with pytest.raises(sanitizer.SanitizerError, match="use-after-free"):
+        cache.touch(pages)
+
+
+def test_sanitizer_catches_stale_page_aba(sanitize):
+    alloc = PageAllocator(2)
+    st = SimpleNamespace(pages=alloc.alloc(1))
+    sanitizer.note_grant(st, st.pages, alloc)
+    sanitizer.verify_grant(st, alloc)        # fresh grant — fine
+    alloc.free(st.pages)                     # preemption frees the page...
+    other = alloc.alloc(1)                   # ...and it is re-issued (LIFO)
+    assert other == st.pages                 # same id, new generation
+    with pytest.raises(sanitizer.SanitizerError, match="stale page"):
+        sanitizer.verify_grant(st, alloc)    # stale list still names it
+
+
+def test_sanitizer_runs_check_invariant_after_mutation(sanitize):
+    class Broken(PageAllocator):
+        def check_invariant(self):
+            super().check_invariant()
+            raise AssertionError("seeded invariant failure")
+
+    alloc = Broken(2)
+    with pytest.raises(AssertionError, match="seeded"):
+        alloc.alloc(1)
+
+
+def test_sanitizer_validates_phase_edges(sanitize):
+    from repro.serve.scheduler import RequestState
+
+    req = SimpleNamespace(uid=7)
+    st = RequestState(req=req, resume_tokens=np.asarray([1, 2], np.int32))
+    st.phase = "prefill"                     # waiting -> prefill: legal
+    st.phase = "ready"
+    st.phase = "running"
+    with pytest.raises(sanitizer.SanitizerError, match="illegal phase edge"):
+        st.phase = "ready"                   # running -> ready: not an edge
+    st.phase = "waiting"                     # preemption — legal
+    with pytest.raises(sanitizer.SanitizerError, match="unknown phase"):
+        st.phase = "zombie"
+
+
+def test_sanitizer_disabled_is_silent():
+    assert not sanitizer.enabled() or os.environ.get("REPRO_SANITIZE")
+    if sanitizer.enabled():
+        pytest.skip("suite running under REPRO_SANITIZE=1")
+    alloc = PageAllocator(2)
+    pages = alloc.alloc(1)
+    alloc.free(pages)
+    with pytest.raises(AssertionError):      # the allocator's own assert
+        alloc.free(pages)

@@ -140,6 +140,6 @@ def test_dryrun_subprocess_multipod():
     line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT:")][0]
     out = json.loads(line[len("RESULT:"):])
     assert len(out) == 3
-    for k, v in out.items():
+    for v in out.values():
         assert v["devices"] == 8
         assert float(v["flops"]) > 0
