@@ -49,9 +49,18 @@ GATED_SERVE = ("speedup", "paged_vs_gather_speedup",
                # executions — so this gates the overlap plumbing against
                # regression, not an absolute win), and the batched swap-out
                # (one device_get per leaf per victim SET vs one per victim)
-               "async_vs_sync_tokens_per_s", "swap_out_batch_speedup")
+               "async_vs_sync_tokens_per_s", "swap_out_batch_speedup",
+               # observability: traced vs untraced engines on one storm
+               "obs_overhead_tokens_per_s")
 GATED_KERNELS = ("attn.flash_xla.oracle_ratio", "attn.paged_decode.oracle_ratio",
                  "ssd.chunked.oracle_ratio", "moe.dispatch.oracle_ratio")
+
+# absolute floor for the tracing-overhead ratio (traced/untraced tok/s):
+# unlike the other gated ratios this one has a physical target — 1.0, the
+# tracer hot path being a handful of scalar stores into preallocated
+# arrays — so beyond the relative baseline check it is gated absolutely at
+# <=5% overhead, regardless of where the committed baseline drifts.
+OBS_OVERHEAD_FLOOR = float(os.environ.get("BENCH_GATE_OBS_FLOOR", "0.95"))
 
 
 def run_serve() -> dict:
@@ -61,8 +70,17 @@ def run_serve() -> dict:
     pre = serve_bench.bench_preempt(size="gate")
     a = serve_bench.bench_async(size="gate")
     sb = serve_bench.bench_swap_batch()
+    ob = serve_bench.bench_obs_overhead(size="gate")
     paged = r["decode_paths"]["paged"]
     return {
+        # observability: tracing must cost <=5% throughput (also gated
+        # absolutely via OBS_OVERHEAD_FLOOR) and zero tokens
+        "obs_overhead_tokens_per_s": ob["traced_vs_untraced_tokens_per_s"],
+        "obs_tokens_identical": ob["tokens_identical"],
+        "traced_tok_s": ob["modes"]["traced"]["tok_s"],
+        "untraced_tok_s": ob["modes"]["untraced"]["tok_s"],
+        "obs_trace_events": ob["trace_events"],
+        "obs_trace_dropped": ob["trace_dropped"],
         # admission pipeline: storm throughput ratio + per-mode telemetry
         "async_vs_sync_tokens_per_s": a["async_vs_sync_tokens_per_s"],
         "async_tokens_identical": a["tokens_identical"],
@@ -233,6 +251,14 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=3,
                     help="fresh-subprocess runs per bench; the gate takes "
                          "the per-key median")
+    ap.add_argument("--only", action="append", metavar="LABEL.KEY",
+                    default=None,
+                    help="with --update: re-measure and merge only these "
+                         "metrics (e.g. serve.obs_overhead_tokens_per_s) "
+                         "into the committed baseline, leaving every other "
+                         "value untouched — for introducing a new gated key "
+                         "without re-baselining the rest on a possibly "
+                         "different machine")
     ap.add_argument("--out-serve", default="serve_gate.json",
                     help="where --check writes the current serve metrics")
     ap.add_argument("--out-kernels", default="kernels_gate.json")
@@ -244,6 +270,30 @@ def main(argv=None) -> int:
         return 0
     if args.trend:
         return trend(args.out_serve, args.out_kernels)
+    if args.only and not args.update:
+        ap.error("--only requires --update")
+    if args.only:
+        need: dict[str, list[str]] = {}
+        for spec in args.only:
+            label, _, key = spec.partition(".")
+            if label not in ("serve", "kernels") or not key:
+                ap.error(f"--only expects LABEL.KEY with LABEL in "
+                         f"serve/kernels, got {spec!r}")
+            need.setdefault(label, []).append(key)
+        paths = {"serve": SERVE_BASELINE, "kernels": KERNEL_BASELINE}
+        for label, keys in need.items():
+            cur = _median_of(label, args.repeats)
+            base = json.loads(paths[label].read_text())
+            for key in keys:
+                if key not in cur:
+                    raise SystemExit(
+                        f"--only: {label} run produced no metric {key!r}")
+                base[key] = cur[key]
+                print(f"  {label}.{key} <- {cur[key]}")
+            paths[label].write_text(json.dumps(base, indent=2) + "\n")
+            print(f"baseline merged: {paths[label].name} "
+                  f"({len(keys)} key{'s' if len(keys) != 1 else ''})")
+        return 0
     serve = _median_of("serve", args.repeats)
     kernels = _median_of("kernels", args.repeats)
     import jax
@@ -267,6 +317,14 @@ def main(argv=None) -> int:
         failures.append("serve: swap/recompute preemption token identity broken")
     if not serve.get("async_tokens_identical"):
         failures.append("serve: async/sync admission pipeline token identity broken")
+    if not serve.get("obs_tokens_identical"):
+        failures.append("serve: traced/untraced token identity broken")
+    obs_ratio = serve.get("obs_overhead_tokens_per_s")
+    if obs_ratio is not None and obs_ratio < OBS_OVERHEAD_FLOOR:
+        failures.append(
+            f"serve: tracing overhead exceeds the absolute budget: "
+            f"traced/untraced tok/s {obs_ratio:.3f} < {OBS_OVERHEAD_FLOOR}"
+        )
     failures += check(serve, json.loads(SERVE_BASELINE.read_text()),
                       GATED_SERVE, "serve")
     failures += check(kernels, json.loads(KERNEL_BASELINE.read_text()),

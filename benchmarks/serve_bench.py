@@ -41,6 +41,15 @@ The swap-out *batching* microbench rides along: one device→host copy per
 cache leaf for a whole victim set vs the per-victim copies it replaced
 (``swap_out_batch_speedup``, also CI-gated).
 
+The ``--obs`` axis measures the observability layer's cost: the same
+Poisson workload through a traced engine (ring-buffer tracer + metrics on
+every step, phase change, prefill chunk, and DMA) vs the NULL_TRACER
+engine, token identity asserted — the gated ``obs_overhead_tokens_per_s``
+ratio must sit within 5% of 1.0.  ``--trace out.json`` additionally drives
+a preemption-pressure workload with tracing on and writes the
+Perfetto/Chrome timeline, validating every request lifecycle against the
+scheduler state machine before exiting.
+
 Run:   PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
 Smoke: PYTHONPATH=src python benchmarks/serve_bench.py --smoke   (tier-1 CI)
 """
@@ -432,8 +441,7 @@ def bench_async(smoke: bool = False, seed: int = 0,
                                prompt=np.arange(plen, dtype=np.int32),
                                max_new_tokens=2))
         eng.run()
-        for k in eng.stats:          # drop warmup from the reported stats
-            eng.stats[k] = type(eng.stats[k])()
+        eng.reset_stats()            # drop warmup from the reported stats
         return eng
 
     out = {"workload": {
@@ -453,8 +461,7 @@ def bench_async(smoke: bool = False, seed: int = 0,
     for rep in range(reps):
         for mode in modes:
             eng = engines[mode]
-            for k in eng.stats:
-                eng.stats[k] = type(eng.stats[k])()
+            eng.reset_stats()
             toks, dt, steps, step_s, by_uid = drive(eng, make_workload(
                 n, lengths, max_new, mean_interarrival=1, seed=seed))
             tel = eng.telemetry()
@@ -572,6 +579,155 @@ def bench_swap_batch(seed: int = 0, n_victims: int = 6, pages_each: int = 4,
     }
 
 
+def bench_obs_overhead(smoke: bool = False, seed: int = 0,
+                       size: str | None = None) -> dict:
+    """Tracing-overhead bench: the same Poisson workload driven through a
+    traced engine (ring-buffer tracer + metrics on every step, phase change,
+    prefill chunk, and DMA) vs the NULL_TRACER engine, interleaved reps with
+    per-mode medians exactly like ``bench_async``.  The gated ratio
+    ``obs_overhead_tokens_per_s`` (traced / untraced) is the observability
+    layer's whole admission ticket: the hot path is a handful of scalar
+    stores into preallocated numpy arrays, so the ratio must sit within 5%
+    of 1.0 (``OBS_OVERHEAD_FLOOR`` in bench_gate).  Token identity between
+    the modes is asserted — recording an event must never change a token.
+    """
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.models.common import AxisRules, DEFAULT_RULES
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    rules = AxisRules(DEFAULT_RULES)
+    size = size or ("smoke" if smoke else "full")
+    if size == "smoke":
+        lengths, max_new, n, lanes, max_len = (8, 16), 6, 6, 3, 64
+        reps = 2
+    elif size == "gate":
+        lengths, max_new, n, lanes, max_len = (16, 32), 8, 24, 3, 96
+        reps = 3
+    else:
+        lengths, max_new, n, lanes, max_len = (16, 32, 48), 8, 32, 3, 160
+        reps = 3
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def build(traced: bool):
+        eng = ServeEngine(
+            model, params,
+            EngineConfig(batch_slots=lanes, max_len=max_len,
+                         prefill_chunk=8, async_prefill=True,
+                         trace=traced), rules,
+        )
+        for i, plen in enumerate(lengths):     # warm the jit signatures
+            eng.submit(Request(uid=-1 - i,
+                               prompt=np.arange(plen, dtype=np.int32),
+                               max_new_tokens=2))
+        eng.run()
+        eng.reset_stats()
+        return eng
+
+    engines = {"traced": build(True), "untraced": build(False)}
+    runs = {mode: [] for mode in engines}
+    by_mode_tokens = {}
+    for rep in range(reps):
+        for mode, eng in engines.items():
+            eng.reset_stats()
+            toks, dt, steps, step_s, by_uid = drive(eng, make_workload(
+                n, lengths, max_new, mean_interarrival=1, seed=seed))
+            if rep == 0:
+                by_mode_tokens[mode] = by_uid
+            else:
+                assert by_uid == by_mode_tokens[mode], (
+                    f"non-deterministic tokens across reruns ({mode})")
+            runs[mode].append({
+                "tokens": toks, "seconds": dt, "tok_s": toks / dt,
+                "steps": steps, "step_latency_ms": _latency_ms(step_s),
+            })
+    out = {"workload": {
+        "requests": n, "prompt_lengths": list(lengths), "max_new": max_new,
+        "lanes": lanes, "size": size, "reps": reps,
+    }, "modes": {}}
+    for mode, rows in runs.items():
+        rows = sorted(rows, key=lambda r: r["tok_s"])
+        med = rows[len(rows) // 2]
+        med["tok_s_runs"] = [r["tok_s"] for r in runs[mode]]
+        out["modes"][mode] = med
+    # the acceptance bar: tracing must be invisible in the tokens
+    assert by_mode_tokens["traced"] == by_mode_tokens["untraced"], (
+        "traced/untraced engines produced different tokens"
+    )
+    out["tokens_identical"] = True
+    out["traced_vs_untraced_tokens_per_s"] = (
+        out["modes"]["traced"]["tok_s"] / out["modes"]["untraced"]["tok_s"]
+    )
+    tracer = engines["traced"].tracer
+    out["trace_events"] = tracer.total
+    out["trace_dropped"] = tracer.dropped
+    return out
+
+
+def bench_trace(out_path: str, seed: int = 0, smoke: bool = False) -> dict:
+    """Traced preemption-pressure drive: a page pool sized to run dry
+    mid-decode (``lanes * reserve + 1``, the ``bench_preempt`` pattern) with
+    the async admission pipeline on and the swap policy, so the exported
+    Perfetto timeline shows every span class the tracer knows — engine
+    steps, decode batches, prefill chunks on the admission track, swap-out
+    DMA, swap-in staging, phase instants, and the free-page counter track.
+
+    Writes the Chrome-trace JSON to ``out_path`` and validates it on the
+    spot: every request's lifecycle is reconstructed from the phase instants
+    and checked against the scheduler state machine (``PHASE_EDGES``), with
+    every lifecycle starting at ``waiting`` and ending at ``done``.
+    """
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.models.common import AxisRules, DEFAULT_RULES
+    from repro.obs.export import (load_chrome_trace, request_phases,
+                                  validate_lifecycles)
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    rules = AxisRules(DEFAULT_RULES)
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    lanes, ps, plen, max_new = 3, 4, 14, 8
+    n = 4 if smoke else 8
+    reserve = -(-(plen + 1) // ps)
+    n_pages = lanes * reserve + 1       # admits all, dries mid-decode
+    max_len = -(-(plen + max_new + 2) // 16) * 16
+    eng = ServeEngine(model, params, EngineConfig(
+        batch_slots=lanes, max_len=max_len, page_size=ps, n_pages=n_pages,
+        preempt_policy="swap", swap_token_cost=0.0, prefill_chunk=6,
+        async_prefill=True, trace=True,
+    ), rules)
+    eng.submit(Request(uid=-1, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run()                           # warm the jit caches (uid -1 traced
+                                        # too: its lifecycle must validate)
+    toks, dt, steps, _, _ = drive(eng, make_workload(
+        n, (plen,), max_new, mean_interarrival=1, seed=seed))
+    tel = eng.telemetry()
+    eng.save_trace(out_path)
+
+    trace = load_chrome_trace(out_path)
+    hist = validate_lifecycles(trace, require_done=True)
+    lifecycles = request_phases(trace)
+    return {
+        "out": out_path, "tokens": toks, "steps": steps, "seconds": dt,
+        "requests_traced": len(lifecycles),
+        "preemptions": tel["preemptions"],
+        "trace_events": len(trace["traceEvents"]),
+        "phase_histogram": hist,
+        "lifecycles_valid": True,
+    }
+
+
 def bench():
     """CSV rows for benchmarks/run.py (small non-smoke run)."""
     r = bench_pair(smoke=True)
@@ -610,6 +766,15 @@ def main(argv=None):
                          "prefill/swap-in; 'both' asserts token identity "
                          "and reports async_vs_sync_tokens_per_s; 'none' "
                          "skips it")
+    ap.add_argument("--obs", choices=["on", "none"], default="on",
+                    help="tracing-overhead bench (traced vs untraced "
+                         "engines, token identity asserted); reports the "
+                         "gated obs_overhead_tokens_per_s ratio")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="also drive a traced preemption-pressure workload "
+                         "and write its Perfetto/Chrome trace here; the "
+                         "trace is validated against the scheduler state "
+                         "machine before the bench exits")
     ap.add_argument("--out", default="serve_bench.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -627,6 +792,11 @@ def main(argv=None):
         results["async"] = bench_async(smoke=args.smoke, seed=args.seed,
                                        modes=modes)
         results["swap_batch"] = bench_swap_batch(seed=args.seed)
+    if args.obs != "none":
+        results["obs"] = bench_obs_overhead(smoke=args.smoke, seed=args.seed)
+    if args.trace:
+        results["trace"] = bench_trace(args.trace, seed=args.seed,
+                                       smoke=args.smoke)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2, default=float)
     d = results["dense"]
@@ -676,6 +846,17 @@ def main(argv=None):
         print(f"swap-out batching: {sb['speedup']:.2f}x "
               f"({sb['n_victims']} victims x {sb['pages_each']} pages, "
               f"one device_get per leaf vs one per victim)")
+    if "obs" in results:
+        ob = results["obs"]
+        print(f"obs overhead: {ob['traced_vs_untraced_tokens_per_s']:.3f}x "
+              f"traced vs untraced tok/s ({ob['trace_events']} events, "
+              f"{ob['trace_dropped']} dropped, tokens identical)")
+    if "trace" in results:
+        tr = results["trace"]
+        print(f"trace: {tr['requests_traced']} lifecycles / "
+              f"{tr['trace_events']} events validated against the phase "
+              f"state machine ({tr['preemptions']} preemptions) "
+              f"-> {tr['out']}")
     print(f"speedup: {results['speedup']:.2f}x  -> {args.out}")
     return results
 

@@ -49,6 +49,8 @@ class SourceFile:
             self.kind = "serve"
         elif "kernels" in parts:
             self.kind = "kernels"
+        elif "obs" in parts:
+            self.kind = "obs"
         else:
             self.kind = "other"
 

@@ -27,6 +27,7 @@ in the traceback, not reconstructed from token corruption steps later.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import threading
 import weakref
@@ -75,7 +76,7 @@ class _Record:
     """Shared sanitizer state for one engine (or one standalone object)."""
 
     __slots__ = ("lock", "admission_idents", "writer_ident", "writer_name",
-                 "history", "__weakref__")
+                 "history", "tracer", "__weakref__")
 
     def __init__(self) -> None:
         self.lock: Any = None                 # the engine bookkeeping RLock
@@ -83,6 +84,7 @@ class _Record:
         self.writer_ident: int | None = None  # bound on first pools mutation
         self.writer_name: str = ""
         self.history: deque[str] = deque(maxlen=_HISTORY)
+        self.tracer: Any = None               # engine's obs tracer (optional)
 
 
 class _PageTable:
@@ -130,6 +132,13 @@ def _log(rec: _Record, op: str, detail: str = "") -> None:
 
 
 def _raise(rec: _Record, msg: str) -> None:
+    # mirror the finding into the engine's trace (cold path — a finding is
+    # about to abort the run) so a Perfetto timeline shows WHERE the
+    # invariant tripped relative to steps/chunks/swaps
+    if rec.tracer is not None:
+        # tracing must never mask the error itself
+        with contextlib.suppress(Exception):
+            rec.tracer.instant_named("sanitizer: " + msg.splitlines()[0])
     hist = "\n    ".join(rec.history) or "(empty)"
     raise SanitizerError(f"{msg}\n  access history (most recent last):\n"
                          f"    {hist}")
@@ -143,6 +152,7 @@ def register_engine(engine: Any) -> None:
     sanitizer record, so thread/lock checks know which lock guards what."""
     rec = _record_for(engine.cache)
     rec.lock = engine._lock
+    rec.tracer = getattr(engine, "tracer", None)
     with _reg_lock:
         _records[engine.cache.allocator] = rec
         host = getattr(engine.cache, "host", None)

@@ -57,6 +57,11 @@ def main(argv=None):
                     help="route over N cube-replica engines")
     ap.add_argument("--route", choices=["hash", "least_loaded"],
                     default="least_loaded")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record request lifecycles + engine events into "
+                         "the ring-buffer tracer and write a Perfetto/"
+                         "Chrome trace here after the run (open with "
+                         "ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch).reduced()
@@ -74,6 +79,7 @@ def main(argv=None):
         preempt_policy=args.preempt_policy,
         host_pages=args.host_pages or None,
         swap_token_cost=args.swap_cost,
+        trace=args.trace is not None,
     )
     with set_mesh(mesh):
         if args.cubes > 1:
@@ -96,6 +102,9 @@ def main(argv=None):
     print(f"{cfg.name}: {len(done)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s")
     print(json.dumps(eng.telemetry(), indent=2, default=float))
+    if args.trace:
+        eng.save_trace(args.trace)
+        print(f"trace -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""Telemetry snapshots as `dist.collectives`-compatible wire trees.
+
+A telemetry snapshot is nested plain-python data (ints, floats, lists,
+strings).  ``wire_snapshot`` lowers the numeric leaves to a same-shape
+pytree of ``jnp.float32`` arrays, which the existing
+``repro.dist.collectives`` codecs (``compress_tree`` /
+``decompress_tree`` / ``wire_bytes``) accept unchanged — so a future
+multi-process ``CubeRouter`` can ship per-cube telemetry over the same
+wire format as activations.  ``unwire_snapshot`` recovers plain floats
+and lists on the receiving side.
+
+Non-numeric leaves (e.g. the ``host_tier`` label) are dropped at wire
+time: the wire carries measurements, not config.  This module is the one
+place in ``repro.obs`` that imports jax — nothing here is hot-path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+
+def _is_num_list(v: Any) -> bool:
+    return isinstance(v, (list, tuple)) and all(
+        isinstance(x, (int, float)) and not isinstance(x, bool) for x in v
+    )
+
+
+def wire_snapshot(snap: dict[str, Any]) -> dict[str, Any]:
+    """Lower a snapshot's numeric leaves to a jnp.float32 pytree."""
+    out: dict[str, Any] = {}
+    for k, v in snap.items():
+        if isinstance(v, dict):
+            sub = wire_snapshot(v)
+            if sub:
+                out[k] = sub
+        elif isinstance(v, bool):
+            out[k] = jnp.asarray(float(v), jnp.float32)
+        elif isinstance(v, (int, float)):
+            out[k] = jnp.asarray(v, jnp.float32)
+        elif _is_num_list(v):
+            out[k] = jnp.asarray([float(x) for x in v], jnp.float32)
+        # anything else (strings, Nones) stays host-side
+    return out
+
+
+def unwire_snapshot(wired: dict[str, Any]) -> dict[str, Any]:
+    """Recover plain python floats / lists from a wire tree."""
+    out: dict[str, Any] = {}
+    for k, v in wired.items():
+        if isinstance(v, dict):
+            out[k] = unwire_snapshot(v)
+        elif getattr(v, "ndim", None) == 0:
+            out[k] = float(v)
+        else:
+            out[k] = [float(x) for x in v]
+    return out
+
+
+__all__ = ["wire_snapshot", "unwire_snapshot"]

@@ -45,14 +45,26 @@ from repro.analysis.ownership import admission_api
 class AdmissionPipeline:
     """Prefill/restore pipeline feeding a ``ServeEngine``'s ready queue."""
 
+    _STAT_KEYS = ("admitted", "chunks_run", "restores_staged",
+                  "prefills_done")
+
     def __init__(self, engine, async_mode: bool):
         self.engine = engine
         self.async_mode = async_mode
         self._thread: threading.Thread | None = None
         self._stop = False
         self.error: BaseException | None = None
-        self.stats = {"admitted": 0, "chunks_run": 0, "restores_staged": 0,
-                      "prefills_done": 0}
+        # pipeline counters live in the ENGINE's metrics registry (prefix
+        # "pipeline."), whose lock is the engine lock — so the decode
+        # loop's progress check (`metrics.total("pipeline.")`) and
+        # telemetry read them as one coherent cut, never a torn dict scan
+        self._c = {k: engine.metrics.counter("pipeline." + k)
+                   for k in self._STAT_KEYS}
+
+    @property
+    def stats(self) -> dict[str, int]:
+        """Point-in-time copy of the pipeline counters (one lock cut)."""
+        return self.engine.metrics.counters("pipeline.")
 
     # -- shared work items (compute/DMA outside the lock) -------------------
 
@@ -62,14 +74,17 @@ class AdmissionPipeline:
         Touches the host buffers and fresh device arrays only — never the
         pools."""
         eng = self.engine
+        tr = eng.tracer
+        tr.begin(tr.EV_STAGE_IN, st.req.uid, len(st.swap_handle.host_pages))
         staged, state = eng.cache.stage_in(st.swap_handle)
+        tr.end(tr.EV_STAGE_IN, st.req.uid)
         with eng._lock:
             st.staged, st.state_cache = staged, state
             st.swapped = False
             # restore-resume: length/pending_token survived the swap —
             # straight to ready, no prefill re-run
             eng.sched.to_ready(st)
-            self.stats["restores_staged"] += 1
+            self._c["restores_staged"].inc()
             eng._cv.notify_all()
 
     @admission_api
@@ -77,13 +92,16 @@ class AdmissionPipeline:
         """One prefill work unit (a chunk, or the whole prompt when
         chunking is off) into the request's private cache tree."""
         eng = self.engine
+        tr = eng.tracer
+        tr.begin(tr.EV_PREFILL_CHUNK, st.req.uid, chunk)
         done = eng.run_prefill(st, chunk)
         tok = eng.sample_prefill_token(st) if done else None
+        tr.end(tr.EV_PREFILL_CHUNK, st.req.uid)
         with eng._lock:
-            self.stats["chunks_run"] += 1
-            eng.stats["prefill_tokens"] += chunk
+            self._c["chunks_run"].inc()
+            eng.metrics.counter("prefill_tokens").inc(chunk)
             if done:
-                self.stats["prefills_done"] += 1
+                self._c["prefills_done"].inc()
                 eng.finish_prefill(st, tok)
             eng._cv.notify_all()
 
@@ -160,7 +178,7 @@ class AdmissionPipeline:
                 return ("chunk", st, s.chunk_for(st))
         st = s.admit_next(self.engine.cache)
         if st is not None:
-            self.stats["admitted"] += 1
+            self._c["admitted"].inc()
             if st.phase == "restore":
                 return ("restore", st, 0)
             return ("chunk", st, s.chunk_for(st))
@@ -169,6 +187,7 @@ class AdmissionPipeline:
     @admission_api
     def _worker(self) -> None:
         eng = self.engine
+        eng.tracer.ensure_thread_name("admission-pipeline")
         # sanitizer mode: this thread may never mutate pools/block tables or
         # enter a @decode_loop_only method (no-op when disabled)
         if sanitizer.enabled():

@@ -32,8 +32,8 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-import time
 from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,9 @@ from repro.analysis.ownership import (
     decode_loop_only,
     pool_mutator,
 )
+from repro.obs import clock as obs_clock
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, ServeTracer
 
 from .admission import AdmissionPipeline, prefill_logits_token
 from .paged_cache import (
@@ -116,6 +119,15 @@ class EngineConfig:
     # gather-path page read: 'xla' advanced-indexing gather, or 'pallas' for
     # the kernels/paged_attn gather kernel (interpret mode off-TPU)
     gather_impl: str = "xla"
+    # observability (repro.obs): trace=True records engine-step / prefill /
+    # swap / phase events into a preallocated ring buffer (see
+    # ServeEngine.save_trace → Perfetto-loadable JSON); off, every record
+    # call is a single disabled-flag check through the shared NULL_TRACER
+    trace: bool = False
+    trace_capacity: int = 1 << 15   # ring slots; wraparound drops oldest
+    # wrap each compiled decode step in a jax.profiler.TraceAnnotation so
+    # device profiles (XLA/TPU) line up with the host-side obs trace
+    trace_annotations: bool = False
 
 
 def stacked_decode_model(model):
@@ -160,6 +172,25 @@ class ServeEngine:
         self.ecfg = ecfg
         self.rules = rules
         self.cfg = model.cfg
+        # ONE bookkeeping lock (queues, free lists, metrics) shared by the
+        # decode loop and the admission pipeline; jax compute never runs
+        # under it.  The condition variable signals hand-offs both ways
+        # (ready-queue push, page free, submit) so neither loop spins.
+        # Created FIRST: the metrics registry shares it (single-lock
+        # telemetry snapshots) and the cache/host tier count through the
+        # registry.
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self.metrics = MetricsRegistry(lock=self._lock)
+        self.tracer: ServeTracer = (
+            ServeTracer(capacity=ecfg.trace_capacity) if ecfg.trace
+            else NULL_TRACER
+        )
+        if ecfg.trace_annotations:
+            self._annot: Any = lambda: jax.profiler.TraceAnnotation(
+                "repro.decode_step")
+        else:
+            self._annot = contextlib.nullcontext
         ps = ecfg.page_size
         n_pages = (
             ecfg.n_pages
@@ -174,6 +205,7 @@ class ServeEngine:
         self.cache = PagedKVCache(
             model, lanes=ecfg.batch_slots, n_pages=n_pages, page_size=ps,
             max_len=ecfg.max_len, host_pages=host_pages,
+            metrics=self.metrics,
         )
         chunk = (ecfg.prefill_chunk
                  if getattr(model, "supports_chunked_prefill", False) else 0)
@@ -182,20 +214,23 @@ class ServeEngine:
             prefill_chunk=chunk, preempt_policy=ecfg.preempt_policy,
             swap_token_cost=ecfg.swap_token_cost,
             max_inflight_prefills=ecfg.admission_inflight,
-        ))
+        ), tracer=self.tracer)
         self.completed: list[Request] = []
-        self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                      "occupancy_sum": 0.0, "occupancy_max": 0.0,
-                      # decode-lane utilization: active lanes vs capacity,
-                      # summed per step — 1 - lane/slot is the idle fraction
-                      # the async pipeline exists to shrink
-                      "lane_step_sum": 0, "lane_slot_sum": 0}
-        # ONE bookkeeping lock (queues, free lists, stats) shared by the
-        # decode loop and the admission pipeline; jax compute never runs
-        # under it.  The condition variable signals hand-offs both ways
-        # (ready-queue push, page free, submit) so neither loop spins.
-        self._lock = threading.RLock()
-        self._cv = threading.Condition(self._lock)
+        # engine counters, pre-created so hot paths inc without a registry
+        # lookup; lane_step/lane_slot: decode-lane utilization — active
+        # lanes vs capacity, summed per step (1 - lane/slot is the idle
+        # fraction the async pipeline exists to shrink)
+        m = self.metrics
+        self._c_steps = m.counter("steps")
+        self._c_prefill = m.counter("prefill_tokens")
+        self._c_decode = m.counter("decode_tokens")
+        self._c_lane_step = m.counter("lane_step_sum")
+        self._c_lane_slot = m.counter("lane_slot_sum")
+        self._h_occ = m.histogram(
+            "occupancy", tuple(i / 10 for i in range(1, 11)))
+        self._g_occ = m.gauge("occupancy")
+        self._h_step = m.histogram("step_latency_s")
+        self._h_queue = m.histogram("queue_wait_s")
         sanitizer.register_engine(self)
         self.pipeline = AdmissionPipeline(self, ecfg.async_prefill)
         self._idle_since: float | None = None
@@ -371,6 +406,7 @@ class ServeEngine:
         pipeline's private results into the pools (the decode loop is the
         only pools writer)."""
         s, c = self.sched, self.ecfg
+        now = obs_clock.monotonic()
         with self._lock:
             free_lanes = [l for l in range(c.batch_slots)
                           if l not in s.running]
@@ -381,6 +417,8 @@ class ServeEngine:
                 st.lane = lane
                 st.phase = "running"
                 s.running[lane] = st
+                # submit (or preemption requeue) → lane assignment
+                self._h_queue.observe(now - st.submit_ts)
                 take.append(st)
             if take:
                 self._cv.notify_all()    # ready drained: backpressure lifts
@@ -479,12 +517,16 @@ class ServeEngine:
             positions[lane] = st.length
             active[lane] = True
         n_active = int(active.sum())
-        logits, self.cache.pools = self._decode(
-            self.params, self.cache.pools,
-            jnp.asarray(self.cache.block_tables),
-            jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(active),
-        )
+        self.tracer.begin(self.tracer.EV_DECODE, n_active)
+        with self._annot():
+            logits, self.cache.pools = self._decode(
+                self.params, self.cache.pools,
+                jnp.asarray(self.cache.block_tables),
+                jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(active),
+            )
         logits = np.asarray(logits[:, 0], np.float32)
+        self.tracer.end(self.tracer.EV_DECODE, n_active)
         done = 0
         for lane in sorted(list(s.running)):
             st = s.running[lane]
@@ -510,8 +552,8 @@ class ServeEngine:
             ):
                 self._retire_lane(st)
         with self._lock:
-            self.stats["decode_tokens"] += done
-            self.stats["lane_step_sum"] += n_active
+            self._c_decode.inc(done)
+            self._c_lane_step.inc(n_active)
 
     # -- step loop -------------------------------------------------------------
 
@@ -522,6 +564,18 @@ class ServeEngine:
         Returns False when the engine is fully drained.  In async mode a
         round with nothing to decode *waits* briefly on the pipeline's
         hand-off instead of spinning."""
+        self.tracer.ensure_thread_name("decode-loop")
+        t0 = obs_clock.monotonic()
+        self.tracer.begin(self.tracer.EV_STEP)
+        try:
+            return self._step_inner(key)
+        finally:
+            self.tracer.end(self.tracer.EV_STEP)
+            with self._lock:
+                self._h_step.observe(obs_clock.monotonic() - t0)
+
+    @decode_loop_only
+    def _step_inner(self, key=None) -> bool:
         if self.pipeline.error is not None:
             err, self.pipeline.error = self.pipeline.error, None
             raise RuntimeError("admission pipeline died") from err
@@ -548,12 +602,13 @@ class ServeEngine:
                 self._decode_lanes(key)
             progressed = True
         with self._lock:
-            self.stats["steps"] += 1
-            self.stats["lane_slot_sum"] += c.batch_slots
+            self._c_steps.inc()
+            self._c_lane_slot.inc(c.batch_slots)
             occ = self.cache.occupancy()
-            self.stats["occupancy_sum"] += occ
-            self.stats["occupancy_max"] = max(self.stats["occupancy_max"],
-                                              occ)
+            self._h_occ.observe(occ)     # mean = sum/count (count == steps)
+            self._g_occ.set(occ)         # last value + high-water max
+            self.tracer.counter(self.tracer.EV_PAGES_FREE,
+                                self.cache.allocator.n_free)
         if progressed:
             self._idle_since = None
             return True
@@ -569,9 +624,11 @@ class ServeEngine:
         # The deadlock watchdog resets whenever the PIPELINE progresses
         # (chunks/stages/admissions), not just the decode loop: one slow
         # work item (a long whole-prompt compile, say) is not a deadlock
-        now = time.monotonic()
-        with self._lock:
-            pipe_mark = sum(self.pipeline.stats.values())
+        now = obs_clock.monotonic()
+        # one coherent cut of the pipeline counters (registry lock == engine
+        # lock) — the old form summed a stats dict the worker could be
+        # mid-update on
+        pipe_mark = self.metrics.total("pipeline.")
         if self._idle_since is None or pipe_mark != self._idle_pipe_mark:
             self._idle_since = now
             self._idle_pipe_mark = pipe_mark
@@ -605,31 +662,83 @@ class ServeEngine:
         with self._lock:
             return self.sched.load
 
+    @property
+    def stats(self) -> dict:
+        """Back-compat view of the original hand-rolled stats dict, built
+        from one metrics snapshot.  A *copy* — mutating it never touches
+        live metrics; benches reset via :meth:`reset_stats`."""
+        snap = self.metrics.snapshot()
+        c = snap["counters"]
+        occ = snap["histograms"]["occupancy"]
+        return {
+            "steps": c["steps"],
+            "prefill_tokens": c["prefill_tokens"],
+            "decode_tokens": c["decode_tokens"],
+            "occupancy_sum": occ["sum"],
+            "occupancy_max": snap["gauges"]["occupancy"]["max"],
+            "lane_step_sum": c["lane_step_sum"],
+            "lane_slot_sum": c["lane_slot_sum"],
+        }
+
+    def reset_stats(self) -> None:
+        """Zero every metric (engine + pipeline + host tier) in place."""
+        self.metrics.reset()
+
+    def save_trace(self, path: str) -> dict:
+        """Export the engine's ring buffer as Perfetto-loadable JSON."""
+        from repro.obs.export import write_chrome_trace
+
+        return write_chrome_trace(path, {"engine": self.tracer})
+
     def telemetry(self) -> dict:
+        # ONE engine-lock acquisition for the whole cut: the metrics
+        # registry shares the engine lock, so counters (engine, pipeline,
+        # host tier), histograms, and scheduler queue state are one
+        # consistent point in time — and the snapshot is deep (plain
+        # ints/floats/fresh lists), so callers can mutate it freely
         with self._lock:
-            st = dict(self.stats)
-            st["queue_depth"] = self.sched.queue_depth()
-            st["admitting"] = len(self.sched.admitting)
-            st["ready"] = len(self.sched.ready)
-            st["running"] = len(self.sched.running)
-            st["preemptions"] = self.sched.n_preemptions
-            st["swap_preemptions"] = self.sched.n_swap_preemptions
-            st["recompute_preemptions"] = self.sched.n_recompute_preemptions
-            st["max_request_preemptions"] = max(
-                [self.sched.max_preemptions_per_request]
-                + list(self.sched.preemptions_by_uid.values())
-            )
-            pipe = dict(self.pipeline.stats)
-        occ_sum = st.pop("occupancy_sum")
-        st["occupancy_mean"] = occ_sum / st["steps"] if st["steps"] else 0.0
-        lane_cap = st.pop("lane_slot_sum")
-        lane_act = st.pop("lane_step_sum")
+            snap = self.metrics.snapshot()
+            sched = {
+                "queue_depth": self.sched.queue_depth(),
+                "admitting": len(self.sched.admitting),
+                "ready": len(self.sched.ready),
+                "running": len(self.sched.running),
+                "preemptions": self.sched.n_preemptions,
+                "swap_preemptions": self.sched.n_swap_preemptions,
+                "recompute_preemptions": self.sched.n_recompute_preemptions,
+                "max_request_preemptions": max(
+                    [self.sched.max_preemptions_per_request]
+                    + list(self.sched.preemptions_by_uid.values())
+                ),
+            }
+            page_occ = self.cache.occupancy()
+            host_occ = self.cache.host_occupancy()
+            has_host = self.cache.host is not None
+        c = snap["counters"]
+        st: dict = {
+            "steps": c["steps"],
+            "prefill_tokens": c["prefill_tokens"],
+            "decode_tokens": c["decode_tokens"],
+        }
+        st.update(sched)
+        occ = snap["histograms"]["occupancy"]
+        st["occupancy_mean"] = occ["sum"] / occ["count"] if occ["count"] else 0.0
+        st["occupancy_max"] = snap["gauges"]["occupancy"]["max"]
+        lane_cap = c["lane_slot_sum"]
+        lane_act = c["lane_step_sum"]
         st["lane_utilization"] = lane_act / lane_cap if lane_cap else 0.0
         st["decode_idle_fraction"] = 1.0 - st["lane_utilization"]
         st["async_prefill"] = self.ecfg.async_prefill
-        st["pipeline"] = pipe
-        st["page_occupancy"] = self.cache.occupancy()
-        st["host_page_occupancy"] = self.cache.host_occupancy()
-        if self.cache.host is not None:
-            st["host_tier"] = dict(self.cache.host.stats)
+        st["pipeline"] = {
+            k[len("pipeline."):]: v for k, v in c.items()
+            if k.startswith("pipeline.")
+        }
+        st["page_occupancy"] = page_occ
+        st["host_page_occupancy"] = host_occ
+        if has_host:
+            st["host_tier"] = {
+                k[len("host."):]: v for k, v in c.items()
+                if k.startswith("host.")
+            }
+        st["histograms"] = snap["histograms"]
         return st

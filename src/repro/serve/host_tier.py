@@ -38,7 +38,6 @@ serving engine can batch and overlap them:
 """
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass, field
 
 import jax
@@ -46,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.ownership import admission_api, pool_mutator
+from repro.obs.metrics import BYTES_EDGES, MetricsRegistry
 
 from .paged_cache import PageAllocator, _is_seq
 
@@ -75,7 +75,17 @@ class HostPagePool:
     the decode loop may overlap ``stage_in`` on the admission thread.
     """
 
-    def __init__(self, device_pools, n_pages: int, page_size: int):
+    _STAT_KEYS = (
+        "swap_outs", "swap_ins",
+        "pages_out", "pages_in",
+        "bytes_out", "bytes_in",
+        "device_gets",                      # host-blocking device→host reads
+        "dirty_pages_skipped",              # clean-prefix reuse
+        "exhausted_fallbacks",              # host pool couldn't cover a swap
+    )
+
+    def __init__(self, device_pools, n_pages: int, page_size: int,
+                 metrics: MetricsRegistry | None = None):
         self.n_pages = n_pages
         self.page_size = page_size
         self.allocator = PageAllocator(n_pages)
@@ -90,21 +100,23 @@ class HostPagePool:
 
         self.buffers = jax.tree_util.tree_map_with_path(leaf, device_pools)
         # staging (admission thread) and batched swap-out (decode loop) may
-        # overlap; counter bumps go through this lock so none are lost
-        self._stats_lock = threading.Lock()
-        self.stats = {
-            "swap_outs": 0, "swap_ins": 0,
-            "pages_out": 0, "pages_in": 0,
-            "bytes_out": 0, "bytes_in": 0,
-            "device_gets": 0,               # host-blocking device→host reads
-            "dirty_pages_skipped": 0,       # clean-prefix reuse
-            "exhausted_fallbacks": 0,       # host pool couldn't cover a swap
-        }
+        # overlap: counters live in a MetricsRegistry whose (shared engine)
+        # lock makes bumps atomic AND telemetry reads coherent — the old
+        # private stats lock let telemetry iterate the dict mid-update
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c = {k: self.metrics.counter("host." + k)
+                   for k in self._STAT_KEYS}
+        self._h_bytes = self.metrics.histogram("host.swap_bytes", BYTES_EDGES)
+
+    @property
+    def stats(self) -> dict[str, int]:
+        """Point-in-time copy of the host-tier counters (one lock cut)."""
+        return self.metrics.counters("host.")
 
     def _bump(self, **kv) -> None:
-        with self._stats_lock:
+        with self.metrics.lock:
             for k, v in kv.items():
-                self.stats[k] += v
+                self._c[k].inc(v)
 
     @property
     def n_free(self) -> int:
@@ -159,6 +171,8 @@ class HostPagePool:
                 if dev_idx is not None:
                     chunk = np.asarray(jnp.take(pool, dev_idx, axis=1))
                     self._bump(device_gets=1, bytes_out=chunk.nbytes)
+                    self.metrics.observe("host.swap_bytes",
+                                         float(chunk.nbytes), BYTES_EDGES)
                     lo = 0
                     for (handle, _pg, dirty, _ln, _len), hi in zip(items,
                                                                    splits):
@@ -226,6 +240,8 @@ class HostPagePool:
                 return np.zeros((), buf.dtype)
             chunk = buf[:, host_idx]
             self._bump(bytes_in=chunk.nbytes)
+            self.metrics.observe("host.swap_bytes",
+                                 float(chunk.nbytes), BYTES_EDGES)
             return (jax.device_put(chunk, sh) if sh is not None
                     else jnp.asarray(chunk))
 

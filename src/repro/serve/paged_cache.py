@@ -176,7 +176,8 @@ class PagedKVCache:
     """
 
     def __init__(self, model, lanes: int, n_pages: int, page_size: int,
-                 max_len: int, host_pages: int = 0, host_shardings=None):
+                 max_len: int, host_pages: int = 0, host_shardings=None,
+                 metrics=None):
         if not hasattr(model, "cache_page_specs"):
             raise TypeError(
                 f"{type(model).__name__} has no paged-cache layout "
@@ -199,7 +200,8 @@ class PagedKVCache:
         if host_pages:
             from .host_tier import HostPagePool
 
-            self.host = HostPagePool(self.pools, host_pages, page_size)
+            self.host = HostPagePool(self.pools, host_pages, page_size,
+                                     metrics=metrics)
 
     # -- host-side bookkeeping ---------------------------------------------
 

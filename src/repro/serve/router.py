@@ -17,6 +17,7 @@ identical to the multi-cube layout.
 from __future__ import annotations
 
 from repro.core.smc import CUBE_AXIS, make_cube_mesh
+from repro.obs.metrics import MetricsRegistry
 
 from .engine import EngineConfig, Request, ServeEngine
 
@@ -39,11 +40,23 @@ class CubeRouter:
         self.engines = [
             ServeEngine(model, params, ecfg, rules) for _ in range(n_cubes)
         ]
-        self.routed = [0] * n_cubes
+        # routing counters get their own registry (the router has no lock
+        # of its own to share); per-cube keys "routed.<axis><i>"
+        self.metrics = MetricsRegistry()
+        self._c_routed = [
+            self.metrics.counter(f"routed.{self.axis}{i}")
+            for i in range(n_cubes)
+        ]
 
     @property
     def n_cubes(self) -> int:
         return len(self.engines)
+
+    @property
+    def routed(self) -> list[int]:
+        """Per-cube dispatch counts — one coherent cut of the counters."""
+        with self.metrics.lock:
+            return [c.value for c in self._c_routed]
 
     # -- routing --------------------------------------------------------------
 
@@ -55,8 +68,12 @@ class CubeRouter:
 
     def submit(self, req: Request) -> int:
         cube = self._pick(req)
-        self.engines[cube].submit(req)
-        self.routed[cube] += 1
+        eng = self.engines[cube]
+        # the dispatch instant lands on the TARGET engine's trace, so a
+        # request's timeline starts with where the router sent it
+        eng.tracer.instant(eng.tracer.EV_DISPATCH, req.uid, cube)
+        eng.submit(req)
+        self.metrics.inc(f"routed.{self.axis}{cube}")
         return cube
 
     # -- stepping -------------------------------------------------------------
@@ -78,9 +95,25 @@ class CubeRouter:
     # -- telemetry (per-cube queue depth — the least-loaded signal) -----------
 
     def telemetry(self) -> dict:
-        per_cube = {
-            f"{self.axis}{i}": dict(e.telemetry(), routed=self.routed[i])
+        """Deep point-in-time snapshot: one lock acquisition per engine
+        (each ``e.telemetry()`` is itself a single-lock deep cut) plus one
+        for the routing counters — mutating the result never perturbs live
+        stats."""
+        routed = self.routed
+        per_cube: dict = {
+            f"{self.axis}{i}": dict(e.telemetry(), routed=routed[i])
             for i, e in enumerate(self.engines)
         }
-        per_cube["total_routed"] = sum(self.routed)
+        per_cube["total_routed"] = sum(routed)
         return per_cube
+
+    def save_trace(self, path: str) -> dict:
+        """Export every cube's ring buffer into ONE Perfetto JSON — each
+        engine becomes a named process track."""
+        from repro.obs.export import write_chrome_trace
+
+        return write_chrome_trace(
+            path,
+            {f"{self.axis}{i}": e.tracer
+             for i, e in enumerate(self.engines)},
+        )

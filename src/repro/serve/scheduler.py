@@ -56,6 +56,8 @@ import numpy as np
 from repro.analysis import sanitizer
 from repro.analysis.ownership import admission_api, decode_loop_only
 from repro.analysis.phases import check_phase_edge
+from repro.obs import clock as obs_clock
+from repro.obs.trace import NULL_TRACER, ServeTracer
 
 
 @dataclass
@@ -79,6 +81,11 @@ class RequestState:
 
     req: object                     # serve.engine.Request
     resume_tokens: np.ndarray       # tokens to (re)prefill: prompt [+generated]
+    # tracer rides the state so phase writes self-record; declared BEFORE
+    # ``phase`` — dataclass __init__ assigns in declaration order and the
+    # construction-time phase write already emits through it
+    tracer: ServeTracer = NULL_TRACER
+    submit_ts: float = 0.0          # queue-wait clock: (re)entered waiting
     phase: str = "waiting"          # waiting|prefill|restore|ready|running
     pages: list = field(default_factory=list)
     lane: int = -1
@@ -104,15 +111,23 @@ class RequestState:
         return len(self.resume_tokens) - self.prefilled
 
     def __setattr__(self, name: str, value) -> None:
-        # sanitizer mode: validate every phase write against the declared
-        # edge set (repro.analysis.phases) — the runtime twin of the static
-        # phase-transitions lint rule
-        if name == "phase" and sanitizer.enabled():
-            err = check_phase_edge(getattr(self, "phase", None), value)
-            if err is not None:
-                uid = getattr(getattr(self, "req", None), "uid", "?")
-                raise sanitizer.SanitizerError(
-                    f"request uid={uid}: {err}")
+        if name == "phase":
+            # sanitizer mode: validate every phase write against the declared
+            # edge set (repro.analysis.phases) — the runtime twin of the
+            # static phase-transitions lint rule
+            if sanitizer.enabled():
+                err = check_phase_edge(getattr(self, "phase", None), value)
+                if err is not None:
+                    uid = getattr(getattr(self, "req", None), "uid", "?")
+                    self.tracer.instant_named(
+                        f"sanitizer: illegal phase edge -> {value} uid={uid}")
+                    raise sanitizer.SanitizerError(
+                        f"request uid={uid}: {err}")
+            object.__setattr__(self, name, value)
+            # every phase edge lands in the trace as an instant on the
+            # request's lifecycle track (no-op through NULL_TRACER)
+            self.tracer.phase(self.req.uid, value)
+            return
         object.__setattr__(self, name, value)
 
 
@@ -120,7 +135,8 @@ class Scheduler:
     """Admission / chunking / preemption policy over the queue state
     machine: waiting → admitting (prefill|restore) → ready → running."""
 
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig,
+                 tracer: ServeTracer = NULL_TRACER):
         if cfg.policy not in ("fcfs", "spf"):
             raise ValueError(f"unknown scheduler policy: {cfg.policy!r}")
         if cfg.preempt_policy not in ("swap", "recompute"):
@@ -128,6 +144,7 @@ class Scheduler:
                 f"unknown preempt policy: {cfg.preempt_policy!r}"
             )
         self.cfg = cfg
+        self.tracer = tracer
         self.waiting: list[RequestState] = []
         self.admitting: list[RequestState] = []
         self.ready: list[RequestState] = []
@@ -145,7 +162,8 @@ class Scheduler:
 
     def add(self, req) -> None:
         self.waiting.append(RequestState(
-            req=req, resume_tokens=np.asarray(req.prompt, np.int32)
+            req=req, resume_tokens=np.asarray(req.prompt, np.int32),
+            tracer=self.tracer, submit_ts=obs_clock.monotonic(),
         ))
 
     @property
@@ -219,6 +237,7 @@ class Scheduler:
             st.prefilled = 0
             st.phase = "prefill"
         self.admitting.append(st)
+        self.tracer.instant(self.tracer.EV_ADMIT, st.req.uid, len(st.pages))
         return st
 
     def admissions(self, cache, budget: int) -> list[RequestState]:
@@ -304,7 +323,12 @@ class Scheduler:
                     mode = "swap"
             plan.append((st, mode))
         if swap_items:
+            self.tracer.begin(
+                self.tracer.EV_SWAP_OUT, len(swap_items),
+                sum(len(d) for _st, d in swap_items),
+            )
             cache.swap_out_batch(swap_items)
+            self.tracer.end(self.tracer.EV_SWAP_OUT)
         modes = []
         for st, mode in plan:
             cache.clear_lane(st.lane)
@@ -329,6 +353,10 @@ class Scheduler:
                 st.length = 0
                 st.is_resume = True
                 self.n_recompute_preemptions += 1
+            uid_ev = (self.tracer.EV_PREEMPT_SWAP if mode == "swap"
+                      else self.tracer.EV_PREEMPT_RECOMPUTE)
+            self.tracer.instant(uid_ev, st.req.uid)
+            st.submit_ts = obs_clock.monotonic()   # queue wait restarts
             st.phase = "waiting"
             st.preemptions += 1
             self.n_preemptions += 1
