@@ -51,7 +51,12 @@ GATED_SERVE = ("speedup", "paged_vs_gather_speedup",
                # (one device_get per leaf per victim SET vs one per victim)
                "async_vs_sync_tokens_per_s", "swap_out_batch_speedup",
                # observability: traced vs untraced engines on one storm
-               "obs_overhead_tokens_per_s")
+               "obs_overhead_tokens_per_s",
+               # prefix sharing on a duplicate-heavy mix: replayed-prompt
+               # tokens served from the radix index (deterministic > 0.5 by
+               # the bench's two-phase construction) and the throughput
+               # ratio vs re-prefilling every repeat
+               "prefix_hit_rate", "prefix_vs_none_tokens_per_s")
 GATED_KERNELS = ("attn.flash_xla.oracle_ratio", "attn.paged_decode.oracle_ratio",
                  "ssd.chunked.oracle_ratio", "moe.dispatch.oracle_ratio")
 
@@ -71,8 +76,16 @@ def run_serve() -> dict:
     a = serve_bench.bench_async(size="gate")
     sb = serve_bench.bench_swap_batch()
     ob = serve_bench.bench_obs_overhead(size="gate")
+    px = serve_bench.bench_prefix(size="gate")
     paged = r["decode_paths"]["paged"]
     return {
+        # prefix sharing: replay hit rate + reuse-vs-reprefill throughput
+        "prefix_hit_rate": px["prefix_hit_rate"],
+        "prefix_vs_none_tokens_per_s": px["prefix_vs_none_tokens_per_s"],
+        "prefix_tokens_identical": px["tokens_identical"],
+        "prefix_on_tok_s": px["modes"]["on"]["tok_s"],
+        "prefix_off_tok_s": px["modes"]["off"]["tok_s"],
+        "prefix_cow_forks": px["prefix_forks"],
         # observability: tracing must cost <=5% throughput (also gated
         # absolutely via OBS_OVERHEAD_FLOOR) and zero tokens
         "obs_overhead_tokens_per_s": ob["traced_vs_untraced_tokens_per_s"],
@@ -319,6 +332,8 @@ def main(argv=None) -> int:
         failures.append("serve: async/sync admission pipeline token identity broken")
     if not serve.get("obs_tokens_identical"):
         failures.append("serve: traced/untraced token identity broken")
+    if not serve.get("prefix_tokens_identical"):
+        failures.append("serve: prefix-sharing on/off token identity broken")
     obs_ratio = serve.get("obs_overhead_tokens_per_s")
     if obs_ratio is not None and obs_ratio < OBS_OVERHEAD_FLOOR:
         failures.append(

@@ -41,6 +41,16 @@ The swap-out *batching* microbench rides along: one device→host copy per
 cache leaf for a whole victim set vs the per-victim copies it replaced
 (``swap_out_batch_speedup``, also CI-gated).
 
+The ``--prefix-reuse`` axis measures prefix sharing on a duplicate-heavy
+prompt mix (distinct prompts first, zipf-weighted replays after): ``on``
+serves every replay from the radix-indexed resident KV pages (copy-on-write
+forks the tail page at the first divergent write), ``off`` re-prefills it.
+``both`` asserts token identity and reports the gated ``prefix_hit_rate``
+(deterministically > 0.5 by construction) and the
+``prefix_vs_none_tokens_per_s`` replay-phase throughput ratio — the
+prefills not run (the seeding phase is identical work in both modes and is
+excluded from the ratio).
+
 The ``--obs`` axis measures the observability layer's cost: the same
 Poisson workload through a traced engine (ring-buffer tracer + metrics on
 every step, phase change, prefill chunk, and DMA) vs the NULL_TRACER
@@ -77,10 +87,10 @@ def make_workload(n, lengths, max_new, mean_interarrival, seed=0):
     return reqs
 
 
-def drive(engine, workload):
+def drive(engine, workload, shutdown=True):
     """Submit requests on the engine's step clock (arrival = step index);
     returns (tokens, wall_seconds, steps, per_step_seconds, uid→tokens)."""
-    from repro.serve.engine import Request
+    from repro.serve import Request
 
     pending = sorted(workload, key=lambda r: r["arrival"])
     live = []
@@ -101,7 +111,7 @@ def drive(engine, workload):
         step_s.append(time.perf_counter() - ts)
         step += 1
     dt = time.perf_counter() - t0
-    if hasattr(engine, "pipeline"):
+    if shutdown and hasattr(engine, "pipeline"):
         engine.pipeline.shutdown()      # park the admission worker
     tokens = sum(len(r.out_tokens) for r in live)
     assert all(r.done for r in live), "bench drained with unfinished requests"
@@ -178,8 +188,8 @@ def bench_pair(smoke: bool = False, seed: int = 0,
     from repro.configs import get_arch
     from repro.models import build_model
     from repro.models.common import AxisRules, DEFAULT_RULES
-    from repro.serve.dense_engine import DenseSlotEngine
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import (CacheConfig, DenseSlotEngine, EngineConfig,
+                             Request, ServeEngine)
 
     rules = AxisRules(DEFAULT_RULES)
     cfg = get_arch("qwen2.5-3b").reduced()
@@ -228,8 +238,9 @@ def bench_pair(smoke: bool = False, seed: int = 0,
         eng = ServeEngine(
             model, params,
             EngineConfig(batch_slots=paged_lanes, max_len=max_len,
-                         page_size=page_size, n_pages=n_pages,
-                         decode_path=path), rules,
+                         cache=CacheConfig(page_size=page_size,
+                                           n_pages=n_pages,
+                                           decode_path=path)), rules,
         )
         warmup(eng)
         toks, dt, steps, step_s, by_uid = drive(eng, make_workload(
@@ -292,7 +303,7 @@ def bench_preempt(smoke: bool = False, seed: int = 0,
     from repro.configs import get_arch
     from repro.models import build_model
     from repro.models.common import AxisRules, DEFAULT_RULES
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import CacheConfig, EngineConfig, Request, ServeEngine
 
     rules = AxisRules(DEFAULT_RULES)
     cfg = get_arch("qwen2.5-3b").reduced()
@@ -321,9 +332,10 @@ def bench_preempt(smoke: bool = False, seed: int = 0,
         by_policy_tokens = {}
         for policy in policies:
             eng = ServeEngine(model, params, EngineConfig(
-                batch_slots=lanes, max_len=max_len, page_size=ps,
-                n_pages=n_pages, preempt_policy=policy,
-                swap_token_cost=0.0,
+                batch_slots=lanes, max_len=max_len,
+                cache=CacheConfig(page_size=ps, n_pages=n_pages,
+                                  preempt_policy=policy,
+                                  swap_token_cost=0.0),
             ), rules)
             eng.submit(Request(uid=-1, prompt=np.arange(4, dtype=np.int32),
                                max_new_tokens=2))
@@ -401,7 +413,8 @@ def bench_async(smoke: bool = False, seed: int = 0,
     from repro.configs import get_arch
     from repro.models import build_model
     from repro.models.common import AxisRules, DEFAULT_RULES
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import (AdmissionConfig, EngineConfig, Request,
+                             ServeEngine)
 
     rules = AxisRules(DEFAULT_RULES)
     size = size or ("smoke" if smoke else "full")
@@ -431,8 +444,10 @@ def bench_async(smoke: bool = False, seed: int = 0,
             a_model or model, a_params if a_params is not None else params,
             EngineConfig(batch_slots=a_lanes or lanes,
                          max_len=a_max_len or max_len,
-                         prefill_chunk=chunk if a_chunk is None else a_chunk,
-                         async_prefill=async_on), rules,
+                         admission=AdmissionConfig(
+                             prefill_chunk=(chunk if a_chunk is None
+                                            else a_chunk),
+                             async_prefill=async_on)), rules,
         )
         # warm every prefill-chunk jit signature the storm will hit, so the
         # measured ratio is overlap, not one mode eating more compiles
@@ -531,7 +546,7 @@ def bench_swap_batch(seed: int = 0, n_victims: int = 6, pages_each: int = 4,
 
     from repro.configs import get_arch
     from repro.models import build_model
-    from repro.serve.paged_cache import PagedKVCache
+    from repro.serve import PagedKVCache
 
     cfg = get_arch("qwen2.5-3b").reduced()
     model = build_model(cfg)
@@ -541,7 +556,7 @@ def bench_swap_batch(seed: int = 0, n_victims: int = 6, pages_each: int = 4,
                          host_pages=2 * n_pages)
     victims = []
     for lane in range(n_victims):
-        pages = cache.allocator.alloc(pages_each)
+        pages = cache.allocator.acquire(pages_each)
         cache.assign_lane(lane, pages)
         victims.append((pages, lane, pages_each * 16 - 3))
     host = cache.host
@@ -596,7 +611,8 @@ def bench_obs_overhead(smoke: bool = False, seed: int = 0,
     from repro.configs import get_arch
     from repro.models import build_model
     from repro.models.common import AxisRules, DEFAULT_RULES
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import (AdmissionConfig, EngineConfig, ObsConfig,
+                             Request, ServeEngine)
 
     rules = AxisRules(DEFAULT_RULES)
     size = size or ("smoke" if smoke else "full")
@@ -618,8 +634,9 @@ def bench_obs_overhead(smoke: bool = False, seed: int = 0,
         eng = ServeEngine(
             model, params,
             EngineConfig(batch_slots=lanes, max_len=max_len,
-                         prefill_chunk=8, async_prefill=True,
-                         trace=traced), rules,
+                         admission=AdmissionConfig(prefill_chunk=8,
+                                                   async_prefill=True),
+                         obs=ObsConfig(trace=traced)), rules,
         )
         for i, plen in enumerate(lengths):     # warm the jit signatures
             eng.submit(Request(uid=-1 - i,
@@ -669,6 +686,120 @@ def bench_obs_overhead(smoke: bool = False, seed: int = 0,
     return out
 
 
+def bench_prefix(smoke: bool = False, seed: int = 0,
+                 modes=("on", "off"), size: str | None = None) -> dict:
+    """Prefix-reuse bench: a duplicate-heavy prompt mix through the paged
+    engine with ``prefix_sharing`` on vs off.
+
+    Phase 1 serves the ``distinct`` base prompts to completion, seeding the
+    radix index (their pages survive request retirement because the index
+    holds a refcount); phase 2 replays ``n - distinct`` requests drawn
+    zipf-weighted from the same prompts — with sharing on, every replay is a
+    full-terminal match that reuses the resident KV pages and skips its
+    prefill entirely (copy-on-write forks the tail page before the lane's
+    first decode write).  The two-phase shape makes the gated
+    ``prefix_hit_rate`` deterministic (replayed tokens / looked-up tokens)
+    instead of a race between duplicate arrivals and the first instance's
+    index insert.
+
+    Token identity between the modes is asserted — serving a prompt from
+    cached pages must reproduce the re-prefill tokens bit-for-bit (greedy)
+    — and the on-mode hit rate must clear 0.5, so a silently dead index
+    cannot pass the smoke or the CI gate.  ``prefix_vs_none_tokens_per_s``
+    (the gated throughput ratio) is the prefills not run."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.models.common import AxisRules, DEFAULT_RULES
+    from repro.serve import CacheConfig, EngineConfig, Request, ServeEngine
+
+    rules = AxisRules(DEFAULT_RULES)
+    size = size or ("smoke" if smoke else "full")
+    if size == "smoke":
+        distinct, n, plen, max_new, lanes, max_len = 2, 6, 12, 5, 3, 64
+    elif size == "gate":
+        distinct, n, plen, max_new, lanes, max_len = 3, 12, 24, 8, 3, 96
+    else:
+        distinct, n, plen, max_new, lanes, max_len = 4, 24, 48, 10, 4, 160
+    ps = 16
+    # pool sized so the whole distinct-prompt working set stays resident
+    # beside the decode lanes: this bench measures reuse, not eviction
+    # (host-tier retire/restore has its own tests)
+    pages_each = -(-(plen + max_new + 1) // ps)
+    n_pages = (distinct + lanes) * pages_each + lanes
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(seed)
+    bases = [rng.integers(0, 512, size=(plen,)).astype(np.int32)
+             for _ in range(distinct)]
+    zipf = 1.0 / np.arange(1, distinct + 1)
+    picks = rng.choice(distinct, size=n - distinct, p=zipf / zipf.sum())
+
+    def phase(idxs, uid0, gap):
+        return [dict(uid=uid0 + j, prompt=bases[k], max_new_tokens=max_new,
+                     arrival=j * gap) for j, k in enumerate(idxs)]
+
+    out = {"workload": {
+        "requests": n, "distinct_prompts": distinct, "prompt_len": plen,
+        "max_new": max_new, "lanes": lanes, "page_size": ps,
+        "n_pages": n_pages, "size": size,
+    }, "modes": {}}
+    by_mode_tokens = {}
+    for mode in modes:
+        eng = ServeEngine(model, params, EngineConfig(
+            batch_slots=lanes, max_len=max_len,
+            cache=CacheConfig(page_size=ps, n_pages=n_pages,
+                              prefix_sharing=mode == "on"),
+        ), rules)
+        eng.submit(Request(uid=-1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2))
+        eng.run()                       # warm the jit caches
+        eng.reset_stats()
+        t1, dt1, s1, ss1, by1 = drive(eng, phase(range(distinct), 0, 2),
+                                      shutdown=False)
+        t2, dt2, s2, ss2, by2 = drive(eng, phase(picks, distinct, 1))
+        tel = eng.telemetry()
+        by_mode_tokens[mode] = {**by1, **by2}
+        toks, dt = t1 + t2, dt1 + dt2
+        out["modes"][mode] = {
+            "tokens": toks, "seconds": dt, "tok_s": toks / dt,
+            "steps": s1 + s2, "step_latency_ms": _latency_ms(ss1 + ss2),
+            "replay_seconds": dt2, "replay_tok_s": t2 / dt2,
+            "prefill_tokens": tel["prefill_tokens"],
+            "prefix": tel.get("prefix"),
+        }
+        if mode == "on":
+            pr = tel["prefix"]
+            # the acceptance bar: the replays actually hit the index
+            assert pr["hit_rate"] > 0.5, (
+                f"prefix index dead: hit rate {pr['hit_rate']:.2f} on a "
+                "duplicate-heavy workload"
+            )
+            out["prefix_hit_rate"] = pr["hit_rate"]
+            out["prefix_forks"] = pr["forks"]
+    if len(modes) == 2:
+        # the acceptance bar: serving from cached pages must reproduce the
+        # re-prefill tokens bit-for-bit — greedy, so any divergence is a
+        # numeric break, not sampling noise
+        assert by_mode_tokens["on"] == by_mode_tokens["off"], (
+            "prefix sharing on/off produced different tokens"
+        )
+        out["tokens_identical"] = True
+        # the gated ratio is measured on the REPLAY phase only: phase 1
+        # (seeding the index with the distinct prompts) is identical work
+        # in both modes, so folding it in only dilutes the reuse signal
+        # with decode time the mechanism never touches
+        out["prefix_vs_none_tokens_per_s"] = (
+            out["modes"]["on"]["replay_tok_s"]
+            / out["modes"]["off"]["replay_tok_s"]
+        )
+    return out
+
+
 def bench_trace(out_path: str, seed: int = 0, smoke: bool = False) -> dict:
     """Traced preemption-pressure drive: a page pool sized to run dry
     mid-decode (``lanes * reserve + 1``, the ``bench_preempt`` pattern) with
@@ -689,7 +820,8 @@ def bench_trace(out_path: str, seed: int = 0, smoke: bool = False) -> dict:
     from repro.models.common import AxisRules, DEFAULT_RULES
     from repro.obs.export import (load_chrome_trace, request_phases,
                                   validate_lifecycles)
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import (AdmissionConfig, CacheConfig, EngineConfig,
+                             ObsConfig, Request, ServeEngine)
 
     rules = AxisRules(DEFAULT_RULES)
     cfg = get_arch("qwen2.5-3b").reduced()
@@ -702,9 +834,11 @@ def bench_trace(out_path: str, seed: int = 0, smoke: bool = False) -> dict:
     n_pages = lanes * reserve + 1       # admits all, dries mid-decode
     max_len = -(-(plen + max_new + 2) // 16) * 16
     eng = ServeEngine(model, params, EngineConfig(
-        batch_slots=lanes, max_len=max_len, page_size=ps, n_pages=n_pages,
-        preempt_policy="swap", swap_token_cost=0.0, prefill_chunk=6,
-        async_prefill=True, trace=True,
+        batch_slots=lanes, max_len=max_len,
+        cache=CacheConfig(page_size=ps, n_pages=n_pages,
+                          preempt_policy="swap", swap_token_cost=0.0),
+        admission=AdmissionConfig(prefill_chunk=6, async_prefill=True),
+        obs=ObsConfig(trace=True),
     ), rules)
     eng.submit(Request(uid=-1, prompt=np.arange(4, dtype=np.int32),
                        max_new_tokens=2))
@@ -766,6 +900,13 @@ def main(argv=None):
                          "prefill/swap-in; 'both' asserts token identity "
                          "and reports async_vs_sync_tokens_per_s; 'none' "
                          "skips it")
+    ap.add_argument("--prefix-reuse", choices=["on", "off", "both", "none"],
+                    default="both",
+                    help="prefix-sharing bench on a duplicate-heavy prompt "
+                         "mix: radix-index reuse + copy-on-write vs "
+                         "re-prefilling every repeat; 'both' asserts token "
+                         "identity and reports the gated prefix_hit_rate "
+                         "and prefix_vs_none_tokens_per_s; 'none' skips it")
     ap.add_argument("--obs", choices=["on", "none"], default="on",
                     help="tracing-overhead bench (traced vs untraced "
                          "engines, token identity asserted); reports the "
@@ -792,6 +933,11 @@ def main(argv=None):
         results["async"] = bench_async(smoke=args.smoke, seed=args.seed,
                                        modes=modes)
         results["swap_batch"] = bench_swap_batch(seed=args.seed)
+    if args.prefix_reuse != "none":
+        modes = (("on", "off") if args.prefix_reuse == "both"
+                 else (args.prefix_reuse,))
+        results["prefix"] = bench_prefix(smoke=args.smoke, seed=args.seed,
+                                         modes=modes)
     if args.obs != "none":
         results["obs"] = bench_obs_overhead(smoke=args.smoke, seed=args.seed)
     if args.trace:
@@ -846,6 +992,17 @@ def main(argv=None):
         print(f"swap-out batching: {sb['speedup']:.2f}x "
               f"({sb['n_victims']} victims x {sb['pages_each']} pages, "
               f"one device_get per leaf vs one per victim)")
+    if "prefix" in results:
+        px = results["prefix"]
+        for mode, row in px["modes"].items():
+            print(f"prefix={mode:3s}: {row['tok_s']:8.2f} tok/s  "
+                  f"(replay {row['replay_tok_s']:.2f} tok/s, "
+                  f"{row['prefill_tokens']} prefill tokens)")
+        if "prefix_vs_none_tokens_per_s" in px:
+            print(f"prefix vs none: "
+                  f"{px['prefix_vs_none_tokens_per_s']:.2f}x  "
+                  f"(hit rate {px['prefix_hit_rate']:.2f}, "
+                  f"{px['prefix_forks']} CoW forks, tokens identical)")
     if "obs" in results:
         ob = results["obs"]
         print(f"obs overhead: {ob['traced_vs_untraced_tokens_per_s']:.3f}x "

@@ -15,8 +15,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.models.common import AxisRules, DEFAULT_RULES
-from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.router import CubeRouter
+from repro.serve import CubeRouter, EngineConfig, Request, ServeEngine
 
 
 def main():

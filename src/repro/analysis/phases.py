@@ -15,9 +15,15 @@ The machine (see ``serve/scheduler.py``'s module docstring)::
     waiting ──admit──▶ prefill ──finish──▶ ready ──lane──▶ running
         │                 │                  ▲                │
         │                 └───early EOS──▶ done ◀──retire─────┤
-        └──admit──▶ restore ────stage───────┘                 │
+        ├──admit──▶ restore ────stage───────┤        ▲        │
+        │                                   │        │        │
+        └──admit──▶ match ───hit──────------┴─early EOS       │
         ▲                                                     │
         └───────────────────preempt───────────────────────────┘
+
+``match`` is the prefix-cache hit path: the whole prompt (and its first
+greedy token) was already resident, so the request skips prefill and goes
+straight to ready once any host-resident prefix pages are staged back in.
 """
 from __future__ import annotations
 
@@ -27,11 +33,14 @@ PHASE_EDGES: frozenset[tuple[str, str]] = frozenset({
     ("waiting", "waiting"),      # construction
     ("waiting", "prefill"),      # Scheduler.admit_next (fresh / recompute)
     ("waiting", "restore"),      # Scheduler.admit_next (swapped)
+    ("waiting", "match"),        # Scheduler.admit_next (full prefix hit)
     ("prefill", "ready"),        # Scheduler.to_ready (prefill finished)
     ("restore", "ready"),        # Scheduler.to_ready (restore staged)
+    ("match", "ready"),          # Scheduler.to_ready (match finished)
     ("ready", "running"),        # ServeEngine._fill_lanes (lane assigned)
     ("running", "waiting"),      # Scheduler.preempt_batch (evicted)
     ("prefill", "done"),         # ServeEngine._retire (early EOS, no lane)
+    ("match", "done"),           # ServeEngine._retire (stored token is EOS)
     ("running", "done"),         # ServeEngine._retire (max tokens / EOS)
 })
 
@@ -41,6 +50,7 @@ PHASE_WRITERS: dict[str, frozenset[str]] = {
     "waiting": frozenset({"Scheduler.preempt_batch"}),
     "prefill": frozenset({"Scheduler.admit_next"}),
     "restore": frozenset({"Scheduler.admit_next"}),
+    "match": frozenset({"Scheduler.admit_next"}),
     "ready": frozenset({"Scheduler.to_ready"}),
     "running": frozenset({"ServeEngine._fill_lanes"}),
     "done": frozenset({"ServeEngine._retire"}),

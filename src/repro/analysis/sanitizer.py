@@ -12,11 +12,15 @@ call in here):
   likewise must never run on an admission thread;
 * **lock discipline** — free-list/host-allocator mutators (``@pool_mutator
   ("free_list")``) must hold the engine's bookkeeping lock;
-* **epoch-checked alloc/free** — every page allocation bumps a per-page
-  generation; frees and uses of freed page ids are caught immediately
-  (double-free, free-of-unallocated, use-after-free), and the grant/verify
-  lease API catches the ABA case: a page id freed by preemption, re-issued
-  to another request, then written through a stale list;
+* **epoch-checked acquire/release** — every page acquisition bumps a
+  per-page generation; releases and uses of freed page ids are caught
+  immediately (double-release, release-of-unallocated, use-after-free),
+  and the grant/verify lease API catches the ABA case: a page id freed by
+  preemption, re-issued to another request, then written through a stale
+  list.  The refcounted ownership API (``acquire``/``share``/``release``/
+  ``fork_for_write``) is mirrored in a per-page reference count that is
+  cross-checked against the allocator's own ``refs`` map after every op —
+  a shared page only becomes "freed" when its last owner releases it;
 * **invariants** — ``check_invariant()`` runs after every mutating op on an
   object that has one (``PagedKVCache``/``PageAllocator``/``HostPagePool``),
   not just at explicit test checkpoints.
@@ -88,14 +92,16 @@ class _Record:
 
 
 class _PageTable:
-    """Per-allocator page lifetime table (epochs + live/freed sets)."""
+    """Per-allocator page lifetime table (epochs + live/freed sets + an
+    independent refcount mirror for the share/release ownership API)."""
 
-    __slots__ = ("live", "freed", "gen", "__weakref__")
+    __slots__ = ("live", "freed", "gen", "ref", "__weakref__")
 
     def __init__(self) -> None:
         self.live: set[int] = set()
         self.freed: set[int] = set()
         self.gen: dict[int, int] = {}
+        self.ref: dict[int, int] = {}
 
 
 _records: "weakref.WeakKeyDictionary[Any, _Record]" = (
@@ -210,11 +216,14 @@ def pre_mutate(obj: Any, kind: str, name: str,
     alloc = _page_alloc_of(obj)
     if alloc is not None and pages:
         tab = _table_for(alloc)
-        if name == "free":
+        if name in ("free", "release"):
             for p in pages:
                 if p in tab.freed:
                     _raise(rec, f"double free of page {p}")
         else:
+            # share / fork_for_write / every pools op with page args:
+            # touching a freed page id is a use-after-free regardless of
+            # whether the op would have bumped or dropped a refcount
             for p in pages:
                 if p in tab.freed:
                     _raise(rec, f"use-after-free: {name!r} touches freed "
@@ -227,18 +236,52 @@ def post_mutate(obj: Any, kind: str, name: str, pages: list[int] | None,
     alloc = _page_alloc_of(obj)
     if alloc is not None:
         tab = _table_for(alloc)
-        if name == "alloc" and result:
+        truth = getattr(alloc, "refs", None)   # allocator's own refcounts
+        if name in ("alloc", "acquire") and result:
             for p in result:
                 if p in tab.live:
                     _raise(rec, f"page {p} double-allocated")
                 tab.live.add(p)
                 tab.freed.discard(p)
                 tab.gen[p] = tab.gen.get(p, 0) + 1
+                tab.ref[p] = 1
             _log(rec, f"{kind}:{name} ->", f"pages={list(result)}")
-        elif name == "free" and pages:
+        elif name == "share" and pages:
+            for p in pages:
+                cur = tab.ref.get(p)
+                if cur is None:    # page predates sanitizer enable
+                    cur = (truth.get(p, 1) - 1) if truth is not None else 0
+                tab.ref[p] = cur + 1
+        elif name == "release" and pages:
+            returned = set(result) if result else set()
+            for p in pages:
+                if p in returned:
+                    tab.live.discard(p)
+                    tab.freed.add(p)
+                    tab.ref.pop(p, None)
+                    continue
+                cur = tab.ref.get(p)
+                if cur is None:
+                    tab.ref[p] = (truth.get(p, 1) if truth is not None
+                                  else 1)
+                elif cur <= 1:
+                    _raise(rec, f"refcount underflow: page {p} released "
+                                f"below one owner without being freed")
+                else:
+                    tab.ref[p] = cur - 1
+        elif name == "free" and pages:   # legacy single-owner surface
             for p in pages:
                 tab.live.discard(p)
                 tab.freed.add(p)
+                tab.ref.pop(p, None)
+        if truth is not None and name in ("acquire", "share", "release"):
+            for p in list(pages or ()) + (list(result)
+                                          if isinstance(result, list)
+                                          else []):
+                if p in tab.ref and tab.ref[p] != truth.get(p, 0):
+                    _raise(rec, f"refcount mirror diverged for page {p}: "
+                                f"sanitizer saw {tab.ref[p]} owners, "
+                                f"allocator says {truth.get(p, 0)}")
     check = getattr(obj, "check_invariant", None)
     if check is None:
         check = getattr(getattr(obj, "cache", None), "check_invariant", None)

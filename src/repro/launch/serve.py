@@ -16,8 +16,15 @@ from repro.configs import get_arch
 from repro.dist.sharding import arch_rules
 from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.models import build_model
-from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.router import CubeRouter
+from repro.serve import (
+    AdmissionConfig,
+    CacheConfig,
+    CubeRouter,
+    EngineConfig,
+    ObsConfig,
+    Request,
+    ServeEngine,
+)
 
 
 def main(argv=None):
@@ -53,9 +60,14 @@ def main(argv=None):
     ap.add_argument("--swap-cost", type=float, default=0.25,
                     help="cost model: moving one token of KV relative to "
                          "recomputing it (0 = always swap)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="radix-index resident prompt prefixes so repeat "
+                         "prompts reuse their KV pages (copy-on-write on "
+                         "divergence; token-identical either way)")
     ap.add_argument("--cubes", type=int, default=1,
                     help="route over N cube-replica engines")
-    ap.add_argument("--route", choices=["hash", "least_loaded"],
+    ap.add_argument("--route",
+                    choices=["hash", "least_loaded", "prefix_affinity"],
                     default="least_loaded")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record request lifecycles + engine events into "
@@ -71,15 +83,20 @@ def main(argv=None):
     params = model.init(jax.random.key(0))
     ecfg = EngineConfig(
         batch_slots=args.slots, max_len=args.max_len,
-        page_size=args.page_size, n_pages=args.pages or None,
-        policy=args.policy, prefill_chunk=args.prefill_chunk,
-        max_step_tokens=args.max_step_tokens,
-        async_prefill=args.async_prefill == "on",
-        admission_inflight=args.admission_inflight,
-        preempt_policy=args.preempt_policy,
-        host_pages=args.host_pages or None,
-        swap_token_cost=args.swap_cost,
-        trace=args.trace is not None,
+        cache=CacheConfig(
+            page_size=args.page_size, n_pages=args.pages or None,
+            preempt_policy=args.preempt_policy,
+            host_pages=args.host_pages or None,
+            swap_token_cost=args.swap_cost,
+            prefix_sharing=args.prefix_sharing,
+        ),
+        admission=AdmissionConfig(
+            policy=args.policy, prefill_chunk=args.prefill_chunk,
+            max_step_tokens=args.max_step_tokens,
+            async_prefill=args.async_prefill == "on",
+            admission_inflight=args.admission_inflight,
+        ),
+        obs=ObsConfig(trace=args.trace is not None),
     )
     with set_mesh(mesh):
         if args.cubes > 1:

@@ -212,7 +212,8 @@ class ServeTracer(Tracer):
 
     # Request lifecycle phases, in the scheduler's own vocabulary.  Kept
     # in sync with repro.analysis.phases.PHASE_EDGES by a test.
-    PHASES = ("waiting", "prefill", "restore", "ready", "running", "done")
+    PHASES = ("waiting", "match", "prefill", "restore", "ready", "running",
+              "done")
 
     def __init__(self, capacity: int = 1 << 15, enabled: bool = True):
         super().__init__(capacity=capacity, enabled=enabled)
@@ -226,6 +227,9 @@ class ServeTracer(Tracer):
         self.EV_PREEMPT_RECOMPUTE = self.register("preempt.recompute", ("uid",))
         self.EV_DISPATCH = self.register("router.dispatch", ("uid", "cube"))
         self.EV_PAGES_FREE = self.register("pages.free", ())
+        self.EV_PREFIX_HIT = self.register("prefix.hit", ("uid", "tokens"))
+        self.EV_PREFIX_FORK = self.register("prefix.fork", ("uid", "page"))
+        self.EV_PREFIX_RETIRE = self.register("prefix.retire", ("pages",))
         # Phase events are contiguous ids so `phase()` is one dict lookup
         # away from the right event id on the hot path.
         self._phase_ev = {p: self.register("phase." + p, ("uid",)) for p in self.PHASES}

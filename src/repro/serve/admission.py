@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import threading
 
+import jax
 import jax.numpy as jnp
 
 from repro.analysis import sanitizer
@@ -46,7 +47,7 @@ class AdmissionPipeline:
     """Prefill/restore pipeline feeding a ``ServeEngine``'s ready queue."""
 
     _STAT_KEYS = ("admitted", "chunks_run", "restores_staged",
-                  "prefills_done")
+                  "prefills_done", "matches")
 
     def __init__(self, engine, async_mode: bool):
         self.engine = engine
@@ -105,6 +106,35 @@ class AdmissionPipeline:
                 eng.finish_prefill(st, tok)
             eng._cv.notify_all()
 
+    @admission_api
+    def _match(self, st) -> None:
+        """Full prefix-cache hit: stage any host-retired prefix pages
+        (host→device DMA outside the lock), adopt the terminal's state
+        snapshot, and hand the request straight to ready — no prefill
+        compute at all."""
+        eng = self.engine
+        tr = eng.tracer
+        claim = st.prefix_claim
+        staged = None
+        if claim.restore:
+            tr.begin(tr.EV_STAGE_IN, st.req.uid, len(claim.restore))
+            staged = eng.cache.host.get_pages(
+                [hp for _h, hp, _d in claim.restore],
+                eng.cache.host_shardings,
+            )
+            tr.end(tr.EV_STAGE_IN, st.req.uid)
+        state = (jax.tree.map(jnp.asarray, claim.state)
+                 if claim.state is not None else None)
+        with eng._lock:
+            if staged is not None:
+                st.prefix_staged = (
+                    staged, [d for _h, _hp, d in claim.restore])
+            if state is not None:
+                st.state_cache = state
+            self._c["matches"].inc()
+            eng.finish_match(st)
+            eng._cv.notify_all()
+
     # -- sync mode ----------------------------------------------------------
 
     @admission_api
@@ -117,6 +147,9 @@ class AdmissionPipeline:
             progressed = bool(s.admissions(eng.cache, budget))
         for st in [x for x in s.admitting if x.phase == "restore"]:
             self._stage(st)
+            progressed = True
+        for st in [x for x in s.admitting if x.phase == "match"]:
+            self._match(st)
             progressed = True
         for st in list(s.admitting):
             if st.phase != "prefill":
@@ -174,6 +207,9 @@ class AdmissionPipeline:
             if st.phase == "restore":
                 return ("restore", st, 0)
         for st in s.admitting:
+            if st.phase == "match":
+                return ("match", st, 0)
+        for st in s.admitting:
             if st.phase == "prefill":
                 return ("chunk", st, s.chunk_for(st))
         st = s.admit_next(self.engine.cache)
@@ -181,6 +217,8 @@ class AdmissionPipeline:
             self._c["admitted"].inc()
             if st.phase == "restore":
                 return ("restore", st, 0)
+            if st.phase == "match":
+                return ("match", st, 0)
             return ("chunk", st, s.chunk_for(st))
         return None
 
@@ -209,6 +247,8 @@ class AdmissionPipeline:
                 kind, st, chunk = work
                 if kind == "restore":
                     self._stage(st)
+                elif kind == "match":
+                    self._match(st)
                 else:
                     self._chunk(st, chunk)
         except BaseException as e:  # noqa: B036 - surface in the decode loop

@@ -32,6 +32,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -69,39 +70,20 @@ class Request:
 
 
 @dataclass
-class EngineConfig:
-    batch_slots: int = 4            # decode lanes (compute width, not memory)
-    max_len: int = 256              # per-request context capacity
-    eos_id: int | None = None
+class CacheConfig:
+    """Paged-KV memory: device pool, host tier, preemption, read paths."""
+
     # paged-KV pool (memory width; defaults to the v1 dense budget)
     page_size: int = 16
     n_pages: int | None = None      # None → batch_slots * max_len / page_size
-    # scheduler
-    policy: str = "fcfs"            # fcfs | spf
-    # per-step token budget (decode + prefill), 0 = unbounded.  Paces the
-    # SYNC pipeline's inline prefill work; in async mode prefill runs on
-    # the worker's own clock, so the budget bounds decode lanes only and
-    # pipeline pacing comes from admission_inflight
-    max_step_tokens: int = 0
-    prefill_chunk: int = 0          # 0 = whole-prompt prefill
-    # admission pipeline: True runs prefill chunks + swap-in staging on a
-    # worker thread feeding the ready queue (decode lanes never stall on an
-    # arrival or a restore); False runs the identical pipeline inline each
-    # step — the debugging fallback and the bench baseline.  Bit-identical
-    # tokens either way (the pipeline owns no shared device state)
-    async_prefill: bool = True
-    # backpressure: prefills/restores admitted (pages reserved, private
-    # buffers held) but not yet decoding.  Bounds the pipeline's page +
-    # memory footprint; raise it to keep a deep ready queue under storms
-    admission_inflight: int = 2
+    host_pages: int | None = None   # host-tier size; None → 2x n_pages when
+    #                                 preempt_policy='swap', else 0 (no tier)
     # preemption: 'swap' moves a victim's pages to a host-DRAM page pool and
     # restores them on resume (no prefill re-runs; falls back to recompute
     # when the host tier is exhausted or the cost model prefers it);
     # 'recompute' frees the pages and re-prefills prompt + generated tokens
     # (the v2 behavior, proven token-identical to 'swap')
     preempt_policy: str = "swap"
-    host_pages: int | None = None   # host-tier size; None → 2x n_pages when
-    #                                 preempt_policy='swap', else 0 (no tier)
     swap_token_cost: float = 0.25   # cost model: moving one token of KV
     #                                 relative to recomputing it (0 ⇒ always
     #                                 swap when host pages allow)
@@ -119,15 +101,135 @@ class EngineConfig:
     # gather-path page read: 'xla' advanced-indexing gather, or 'pallas' for
     # the kernels/paged_attn gather kernel (interpret mode off-TPU)
     gather_impl: str = "xla"
-    # observability (repro.obs): trace=True records engine-step / prefill /
-    # swap / phase events into a preallocated ring buffer (see
-    # ServeEngine.save_trace → Perfetto-loadable JSON); off, every record
-    # call is a single disabled-flag check through the shared NULL_TRACER
+    # prefix sharing: a radix index over page-sized prompt chunks lets
+    # admissions reuse already-resident prefix pages (refcounted, copy-on-
+    # write on the first divergent write; cold prefixes retire into the
+    # host tier).  Token-identical by construction — shared pages hold
+    # bit-equal content — but OFF by default so throughput baselines don't
+    # silently include cache hits
+    prefix_sharing: bool = False
+
+
+@dataclass
+class AdmissionConfig:
+    """Scheduler + admission-pipeline policy knobs."""
+
+    policy: str = "fcfs"            # fcfs | spf
+    # per-step token budget (decode + prefill), 0 = unbounded.  Paces the
+    # SYNC pipeline's inline prefill work; in async mode prefill runs on
+    # the worker's own clock, so the budget bounds decode lanes only and
+    # pipeline pacing comes from admission_inflight
+    max_step_tokens: int = 0
+    prefill_chunk: int = 0          # 0 = whole-prompt prefill
+    # admission pipeline: True runs prefill chunks + swap-in staging on a
+    # worker thread feeding the ready queue (decode lanes never stall on an
+    # arrival or a restore); False runs the identical pipeline inline each
+    # step — the debugging fallback and the bench baseline.  Bit-identical
+    # tokens either way (the pipeline owns no shared device state)
+    async_prefill: bool = True
+    # backpressure: prefills/restores admitted (pages reserved, private
+    # buffers held) but not yet decoding.  Bounds the pipeline's page +
+    # memory footprint; raise it to keep a deep ready queue under storms
+    admission_inflight: int = 2
+
+
+@dataclass
+class ObsConfig:
+    """Observability (repro.obs) knobs."""
+
+    # trace=True records engine-step / prefill / swap / phase events into a
+    # preallocated ring buffer (see ServeEngine.save_trace →
+    # Perfetto-loadable JSON); off, every record call is a single
+    # disabled-flag check through the shared NULL_TRACER
     trace: bool = False
     trace_capacity: int = 1 << 15   # ring slots; wraparound drops oldest
     # wrap each compiled decode step in a jax.profiler.TraceAnnotation so
     # device profiles (XLA/TPU) line up with the host-side obs trace
     trace_annotations: bool = False
+
+
+def _flat_map() -> dict[str, str]:
+    return {
+        **{f.name: "cache" for f in dataclasses.fields(CacheConfig)},
+        **{f.name: "admission" for f in dataclasses.fields(AdmissionConfig)},
+        **{f.name: "obs" for f in dataclasses.fields(ObsConfig)},
+    }
+
+
+_FLAT_MAP = _flat_map()
+_warned_flat: set[str] = set()
+
+
+@dataclass(init=False)
+class EngineConfig:
+    """Engine configuration: three top-level knobs plus nested groups.
+
+    The ~19 flat knobs the engine accreted across PRs now live in
+    :class:`CacheConfig` / :class:`AdmissionConfig` / :class:`ObsConfig`.
+    Flat kwargs (``EngineConfig(page_size=4)``) are still accepted — routed
+    onto the right group with a once-per-knob ``DeprecationWarning`` — and
+    every old flat name remains readable/writable as a property, so
+    ``dataclasses.replace(ecfg, n_pages=8)`` keeps working.  See
+    MIGRATION.md.
+    """
+
+    batch_slots: int = 4            # decode lanes (compute width, not memory)
+    max_len: int = 256              # per-request context capacity
+    eos_id: int | None = None
+    cache: CacheConfig = field(default_factory=CacheConfig)
+    admission: AdmissionConfig = field(default_factory=AdmissionConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
+
+    def __init__(self, batch_slots: int = 4, max_len: int = 256,
+                 eos_id: int | None = None, cache: CacheConfig | None = None,
+                 admission: AdmissionConfig | None = None,
+                 obs: ObsConfig | None = None, **flat):
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = cache if cache is not None else CacheConfig()
+        self.admission = (admission if admission is not None
+                          else AdmissionConfig())
+        self.obs = obs if obs is not None else ObsConfig()
+        if not flat:
+            return
+        groups: dict[str, dict] = {"cache": {}, "admission": {}, "obs": {}}
+        for k, v in flat.items():
+            g = _FLAT_MAP.get(k)
+            if g is None:
+                raise TypeError(
+                    f"EngineConfig got an unexpected keyword argument {k!r}"
+                )
+            if k not in _warned_flat:
+                _warned_flat.add(k)
+                warnings.warn(
+                    f"EngineConfig({k}=...) is deprecated; use "
+                    f"EngineConfig({g}={g.capitalize()}Config({k}=...))",
+                    DeprecationWarning, stacklevel=2,
+                )
+            groups[g][k] = v
+        if groups["cache"]:
+            self.cache = dataclasses.replace(self.cache, **groups["cache"])
+        if groups["admission"]:
+            self.admission = dataclasses.replace(self.admission,
+                                                 **groups["admission"])
+        if groups["obs"]:
+            self.obs = dataclasses.replace(self.obs, **groups["obs"])
+
+
+def _flat_property(group: str, name: str):
+    def get(self):
+        return getattr(getattr(self, group), name)
+
+    def set_(self, value):
+        setattr(getattr(self, group), name, value)
+
+    return property(get, set_)
+
+
+for _name, _group in _FLAT_MAP.items():
+    setattr(EngineConfig, _name, _flat_property(_group, _name))
+del _name, _group
 
 
 def stacked_decode_model(model):
@@ -205,7 +307,7 @@ class ServeEngine:
         self.cache = PagedKVCache(
             model, lanes=ecfg.batch_slots, n_pages=n_pages, page_size=ps,
             max_len=ecfg.max_len, host_pages=host_pages,
-            metrics=self.metrics,
+            metrics=self.metrics, prefix_sharing=ecfg.prefix_sharing,
         )
         chunk = (ecfg.prefill_chunk
                  if getattr(model, "supports_chunked_prefill", False) else 0)
@@ -317,8 +419,16 @@ class ServeEngine:
             st.prefilled = len(st.resume_tokens)
             st.last_logits = logits[0, -1]
             return True
-        if st.prefilled == 0:
+        if st.prefill_cache is None:
             st.prefill_cache = self._fresh_prefill_tree()
+            claim = st.prefix_claim
+            if claim is not None and claim.seed_pages:
+                # partial prefix hit: copy the shared pages' rows into the
+                # private tree so the extend resumes mid-prompt (st.prefilled
+                # was set to the matched token count at admission)
+                st.prefill_cache = self.cache.seed_prefix(
+                    st.prefill_cache, st.pages[: claim.seed_pages]
+                )
         toks = st.resume_tokens[st.prefilled: st.prefilled + chunk]
         logits, st.prefill_cache = self._extend(
             self.params, st.prefill_cache,
@@ -362,6 +472,35 @@ class ServeEngine:
         return False
 
     @admission_api
+    def finish_match(self, st) -> bool:
+        """Queue bookkeeping for a full prefix-cache hit (under the lock):
+        the prompt's pages and its stored first greedy token are already in
+        hand, so the request skips prefill and goes straight to ready — or
+        retires immediately when the stored token already ends it.
+        Returns True if retired."""
+        st.length = len(st.resume_tokens)
+        st.prefilled = len(st.resume_tokens)
+        req = st.req
+        if st.is_resume:
+            # recompute-resume: the continuation token was sampled before
+            # preemption — the terminal's stored token is irrelevant
+            st.pending_token = int(req.out_tokens[-1])
+            self.sched.to_ready(st)
+            return False
+        tok = int(st.prefix_claim.first_token)
+        st.pending_token = tok
+        req.out_tokens.append(tok)
+        if (
+            len(req.out_tokens) >= req.max_new_tokens
+            or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
+        ):
+            self.sched.admitting.remove(st)
+            self._retire(st)
+            return True
+        self.sched.to_ready(st)
+        return False
+
+    @admission_api
     def _retire(self, st):
         """Retirement bookkeeping shared by both threads: queues, free
         lists, held buffers — never lane or pool state (a decode-retired
@@ -370,9 +509,15 @@ class ServeEngine:
         with self._lock:
             assert st.lane < 0, "retiring a laned request: use _retire_lane"
             st.req.done = True
-            self.cache.allocator.free(st.pages)
+            # release, not free: pages shared with the prefix index (or
+            # another lane) survive — only sole-owned pages hit the free list
+            self.cache.allocator.release(st.pages)
             sanitizer.note_release(st)
             st.pages = []
+            if st.prefix_claim is not None:
+                self.cache.abort_match(st.prefix_claim)
+                st.prefix_claim = None
+            st.prefix_staged = None
             if st.swap_handle is not None:
                 self.cache.host_free(st.swap_handle)
                 st.swap_handle = None
@@ -422,21 +567,48 @@ class ServeEngine:
                 take.append(st)
             if take:
                 self._cv.notify_all()    # ready drained: backpressure lifts
+        inserts: list = []
         for st in take:
             # use-after-free/ABA check: every page id this request holds is
             # live and still of the generation granted at admission
             sanitizer.verify_grant(st, self.cache.allocator)
             self.cache.assign_lane(st.lane, st.pages)
+            if st.prefix_staged is not None:
+                # host-retired prefix pages staged by the pipeline: scatter
+                # them back into their (freshly acquired) device pages
+                staged, dev_pages = st.prefix_staged
+                self.cache.commit_swap_in(staged, dev_pages)
+                st.prefix_staged = None
             if st.staged is not None:                 # swap-in restore
                 self.cache.commit_swap_in(st.staged, st.pages)
                 st.staged = None
             elif st.prefill_cache is not None:        # held prefill cache
+                claim = st.prefix_claim
+                skip = claim.seed_pages if claim is not None else 0
+                if self.cache.prefix is not None and not st.is_resume:
+                    # snapshot recurrent state OUTSIDE the lock (device
+                    # read) before the private tree is dropped, so the
+                    # index can serve full-terminal hits for state families
+                    inserts.append(
+                        (st, self.cache.snapshot_state(st.prefill_cache))
+                    )
                 self.cache.write_prefill(st.pages, st.prefill_cache,
-                                         lane=st.lane)
+                                         lane=st.lane, skip_pages=skip)
                 st.prefill_cache = None
             if st.state_cache is not None:            # restored lane state
                 self.cache.write_state(st.lane, st.state_cache)
                 st.state_cache = None
+        if self.cache.prefix is not None:
+            post = [st for st in take if st.prefix_claim is not None]
+            if post or inserts:
+                with self._lock:
+                    for st in post:
+                        if st.prefix_claim.restore:
+                            self.cache.prefix_finish_restore(st.prefix_claim)
+                        st.prefix_claim = None
+                    for st, state_np in inserts:
+                        self.cache.prefix_insert(st.resume_tokens, st.pages,
+                                                 state_np, st.pending_token)
         return bool(take)
 
     # -- decode ----------------------------------------------------------------
@@ -452,25 +624,46 @@ class ServeEngine:
         Runs under the engine lock: the admission pipeline can neither
         steal the reserved pages nor race the victim bookkeeping."""
         s, cache = self.sched, self.cache
+        alloc = cache.allocator
         ps = cache.page_size
         with self._lock:
-            need = {
+            grow = {
                 lane: max(0, st.length // ps + 1 - len(st.pages))
                 for lane, st in s.running.items()
             }
-            total = sum(need.values())
-            if total == 0:
+            # copy-on-write: a lane whose next write position lands in a
+            # page it shares (with the prefix index or another lane) must
+            # fork that page before the decode step scatters into it
+            forks: dict[int, int] = {}
+            for lane, st in s.running.items():
+                i = st.length // ps
+                if i < len(st.pages) and alloc.refcount(st.pages[i]) > 1:
+                    forks[lane] = i
+            if not any(grow.values()) and not forks:
                 return
-            hold = cache.allocator.alloc(
-                min(total, cache.allocator.n_free)) or []
+            hold = alloc.acquire(
+                min(sum(grow.values()), alloc.n_free)) or []
             victims: list = []
 
             def shortfall() -> int:
-                want = sum(n for lane, n in need.items()
+                want = sum(n for lane, n in grow.items()
                            if s.running[lane] not in victims)
-                freed = sum(len(v.pages) for v in victims)
-                return want - len(hold) - freed
+                want += sum(1 for lane in forks
+                            if s.running[lane] not in victims)
+                # a victim's shared pages survive its eviction (the prefix
+                # index or a co-tenant lane keeps them) — only sole-owned
+                # pages come back to the free list
+                freed = sum(1 for v in victims
+                            for p in v.pages if alloc.refcount(p) == 1)
+                return want - len(hold) - alloc.n_free - freed
 
+            # before evicting a live lane, reclaim cold prefix-index pages:
+            # the persistent prefix cache always yields to running requests
+            if shortfall() > 0 and cache.prefix is not None:
+                reclaimed = cache.prefix_retire(shortfall())
+                if reclaimed:
+                    self.tracer.instant(self.tracer.EV_PREFIX_RETIRE,
+                                        reclaimed)
             while shortfall() > 0:
                 cands = [st for st in s.running.values()
                          if st not in victims]
@@ -481,7 +674,7 @@ class ServeEngine:
                 # could never see); with nothing else in flight the pool is
                 # genuinely too small for this request
                 if len(cands) <= 1 and not (s.ready or s.admitting):
-                    cache.allocator.free(hold)
+                    alloc.release(hold)
                     raise RuntimeError(
                         "page pool exhausted with no preemptible request — "
                         "grow EngineConfig.n_pages"
@@ -495,15 +688,44 @@ class ServeEngine:
                 self._cv.notify_all()    # freed pages: admissions may resume
             for lane in sorted(s.running):
                 st = s.running[lane]
-                n = need.get(lane, 0)
+                n = grow.get(lane, 0)
                 while n > 0:
-                    page = hold.pop() if hold else cache.allocator.alloc(1)[0]
+                    page = hold.pop() if hold else alloc.acquire(1)[0]
                     cache.extend_lane(lane, page, len(st.pages))
                     st.pages.append(page)
-                    sanitizer.note_grant(st, [page], cache.allocator)
+                    sanitizer.note_grant(st, [page], alloc)
                     n -= 1
             if hold:
-                cache.allocator.free(hold)
+                alloc.release(hold)
+            # forks last, from the replenished pool: remap the lane to a
+            # private copy, leaving the shared original with its co-owners
+            copies: list[tuple[int, int]] = []
+            for lane, i in forks.items():
+                st = s.running.get(lane)
+                if st is None:                  # lane was evicted above
+                    continue
+                old = st.pages[i]
+                if alloc.refcount(old) <= 1:    # co-owner vanished meanwhile
+                    continue
+                new = alloc.fork_for_write(old)
+                if new is None:
+                    raise RuntimeError(
+                        "page pool exhausted during copy-on-write fork — "
+                        "grow EngineConfig.n_pages"
+                    )
+                st.pages[i] = new
+                cache.assign_lane(lane, st.pages)
+                sanitizer.note_grant(st, [new], alloc)
+                copies.append((old, new))
+                if cache.prefix is not None:
+                    cache.prefix.note_fork()
+                self.tracer.instant(self.tracer.EV_PREFIX_FORK,
+                                    st.req.uid, old)
+            if copies:
+                # one batched device copy of the forked rows; jax under the
+                # lock follows the preempt_batch/swap_out precedent (the
+                # decode loop owns the pools — nothing can race the copy)
+                cache.fork_pages(copies)
 
     @decode_loop_only
     @pool_mutator("pools")
@@ -662,6 +884,14 @@ class ServeEngine:
         with self._lock:
             return self.sched.load
 
+    def prefix_match_tokens(self, prompt) -> int:
+        """Resident-prefix coverage for a prompt, in tokens — the router's
+        prefix-affinity signal.  0 when prefix sharing is off."""
+        if self.cache.prefix is None:
+            return 0
+        with self._lock:
+            return self.cache.prefix.preview(np.asarray(prompt, np.int32))
+
     @property
     def stats(self) -> dict:
         """Back-compat view of the original hand-rolled stats dict, built
@@ -710,10 +940,15 @@ class ServeEngine:
                     [self.sched.max_preemptions_per_request]
                     + list(self.sched.preemptions_by_uid.values())
                 ),
+                "max_request_prefix_hit_tokens": max(
+                    [self.sched.max_prefix_hit_tokens]
+                    + list(self.sched.prefix_hit_tokens_by_uid.values())
+                ),
             }
             page_occ = self.cache.occupancy()
             host_occ = self.cache.host_occupancy()
             has_host = self.cache.host is not None
+            has_prefix = self.cache.prefix is not None
         c = snap["counters"]
         st: dict = {
             "steps": c["steps"],
@@ -740,5 +975,15 @@ class ServeEngine:
                 k[len("host."):]: v for k, v in c.items()
                 if k.startswith("host.")
             }
+        if has_prefix:
+            pr = {
+                k[len("prefix."):]: v for k, v in c.items()
+                if k.startswith("prefix.")
+            }
+            lookup = pr.get("lookup_tokens", 0)
+            pr["hit_rate"] = (
+                pr.get("hit_tokens", 0) / lookup if lookup else 0.0
+            )
+            st["prefix"] = pr
         st["histograms"] = snap["histograms"]
         return st

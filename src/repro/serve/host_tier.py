@@ -137,7 +137,7 @@ class HostPagePool:
             handle = SwapHandle()
         grow = n_logical - len(handle.host_pages)
         if grow > 0:
-            got = self.allocator.alloc(grow)
+            got = self.allocator.acquire(grow)
             if got is None:
                 self._bump(exhausted_fallbacks=1)
                 self.free(handle)
@@ -221,6 +221,59 @@ class HostPagePool:
                          [(handle, list(device_pages), dirty, lane, length)])
         return handle
 
+    # -- prefix tier (page-granular, handle-free) --------------------------
+
+    @pool_mutator("pools")
+    def put_pages(self, device_pools, device_pages: list[int]):
+        """Copy individual device pages into freshly acquired host pages
+        (the prefix index retiring cold shared prefixes).  One device→host
+        read per seq leaf for the whole batch.  Returns the host page list
+        (caller owns them), or None — with nothing held — when the host
+        pool cannot cover it.  Decode-loop-only: reads the device pools."""
+        got = self.allocator.acquire(len(device_pages))
+        if got is None:
+            self._bump(exhausted_fallbacks=1)
+            return None
+        dev_idx = jnp.asarray(device_pages, jnp.int32)
+        host_idx = np.asarray(got)
+
+        def copy(path, buf, pool):
+            if _is_seq(path):
+                chunk = np.asarray(jnp.take(pool, dev_idx, axis=1))
+                self._bump(device_gets=1, bytes_out=chunk.nbytes)
+                self.metrics.observe("host.swap_bytes",
+                                     float(chunk.nbytes), BYTES_EDGES)
+                buf[:, host_idx] = chunk
+            return buf
+
+        jax.tree_util.tree_map_with_path(copy, self.buffers, device_pools)
+        self._bump(pages_out=len(device_pages))
+        return got
+
+    @admission_api
+    def get_pages(self, host_pages: list[int], shardings=None):
+        """Host→device staging of individual host pages (prefix restore) —
+        pools untouched, so it is safe on the admission pipeline thread.
+        Returns a staged tree shaped for ``PagedKVCache.commit_swap_in``;
+        the host pages stay allocated (the prefix stays host-resident)."""
+        host_idx = np.asarray(host_pages)
+
+        def leaf(path, buf, sh):
+            if not _is_seq(path):
+                return np.zeros((), buf.dtype)
+            chunk = buf[:, host_idx]
+            self._bump(bytes_in=chunk.nbytes)
+            self.metrics.observe("host.swap_bytes",
+                                 float(chunk.nbytes), BYTES_EDGES)
+            return (jax.device_put(chunk, sh) if sh is not None
+                    else jnp.asarray(chunk))
+
+        sh_tree = (shardings if shardings is not None
+                   else jax.tree.map(lambda _: None, self.buffers))
+        staged = jax.tree_util.tree_map_with_path(leaf, self.buffers, sh_tree)
+        self._bump(pages_in=len(host_pages))
+        return staged
+
     # -- swap-in -----------------------------------------------------------
 
     @admission_api
@@ -276,7 +329,7 @@ class HostPagePool:
         invalidating the copy)."""
         if handle is None or not handle.host_pages:
             return
-        self.allocator.free(handle.host_pages)
+        self.allocator.release(handle.host_pages)
         handle.host_pages = []
         handle.clean_pages = 0
         handle.state = None

@@ -21,6 +21,7 @@ is selectable via ``impl='pallas'``.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -35,54 +36,512 @@ def _is_seq(path) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Free-list page allocator (host side)
+# Refcounted page allocator (host side) — the ownership choke point
 # ---------------------------------------------------------------------------
 
 
 class PageAllocator:
-    """LIFO free list over ``n_pages`` physical pages.
+    """LIFO free list + per-page refcounts over ``n_pages`` physical pages.
+
+    The ownership API (the old raw ``alloc``/``free`` surface, redesigned
+    for prefix sharing):
+
+    * ``acquire(n)``        — take n pages out of the free list, each with
+      refcount 1 (the caller is the sole owner);
+    * ``share(pages)``      — add one owner per page (prefix index adopting
+      a lane's pages, a second request matching a resident prefix);
+    * ``release(pages)``    — drop one owner per page; pages whose count
+      hits zero return to the free list (the return value), shared pages
+      survive their co-owners;
+    * ``fork_for_write(p)`` — copy-on-write bookkeeping: exchange the
+      caller's reference to a *shared* page for a fresh private page id
+      (the caller copies the bytes — ``PagedKVCache.fork_pages``).
 
     Callers serialize access (the serving engine holds its bookkeeping lock
-    around every alloc/free — the admission pipeline thread and the decode
-    loop share this free list).  The membership set makes the two
-    cross-thread failure modes loud instead of silent: a page double-freed
-    (or freed by one thread while handed out by another) trips the assert
-    the moment it happens, not steps later as token corruption.
+    around every acquire/release — the admission pipeline thread and the
+    decode loop share this free list).  The refcount map makes the
+    cross-thread failure modes loud instead of silent: a page over-released
+    (or released by one thread while handed out by another) trips the
+    assert the moment it happens, not steps later as token corruption.
     """
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
         self._free_set = set(self._free)
+        # page -> live reference count; a page is in exactly one of
+        # (_free_set, refs) at all times
+        self.refs: dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        """Live owners of ``page`` (0 = free)."""
+        return self.refs.get(page, 0)
+
     @pool_mutator("free_list")
-    def alloc(self, n: int) -> list[int] | None:
-        """n pages, or None (and no allocation) if the pool can't cover it."""
+    def acquire(self, n: int) -> list[int] | None:
+        """n fresh pages at refcount 1 each, or None (and no allocation)
+        if the pool can't cover it."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(pages)
+        for p in pages:
+            self.refs[p] = 1
         return pages
 
     @pool_mutator("free_list")
-    def free(self, pages: list[int]) -> None:
+    def share(self, pages: list[int]) -> None:
+        """Add one owner to each (already live) page."""
         for p in pages:
             assert 0 <= p < self.n_pages
-            assert p not in self._free_set, f"page {p} double-freed"
-            self._free.append(p)
-            self._free_set.add(p)
+            n = self.refs.get(p, 0)
+            assert n >= 1 and p not in self._free_set, (
+                f"page {p} shared while free"
+            )
+            self.refs[p] = n + 1
+
+    @pool_mutator("free_list")
+    def release(self, pages: list[int]) -> list[int]:
+        """Drop one owner per page; returns the subset whose refcount hit
+        zero and went back to the free list."""
+        freed = []
+        for p in pages:
+            assert 0 <= p < self.n_pages
+            n = self.refs.get(p, 0)
+            assert n >= 1 and p not in self._free_set, (
+                f"page {p} released while free (double release)"
+            )
+            if n == 1:
+                del self.refs[p]
+                self._free.append(p)
+                self._free_set.add(p)
+                freed.append(p)
+            else:
+                self.refs[p] = n - 1
+        return freed
+
+    @pool_mutator("free_list")
+    def fork_for_write(self, page: int) -> int | None:
+        """Copy-on-write bookkeeping: give the caller a private page id in
+        exchange for its reference to ``page``.  Returns ``page`` itself
+        when the caller is already the sole owner, a fresh page id (whose
+        bytes the caller must copy) when it is shared, or None when the
+        pool cannot cover the fork."""
+        if self.refs.get(page, 0) <= 1:
+            return page
+        got = self.acquire(1)
+        if got is None:
+            return None
+        self.release([page])
+        return got[0]
 
     def check_invariant(self) -> None:
-        """Free list sane: no duplicates, every entry in range, set and
-        list agree.  Cheap enough for tests to call between stress steps."""
+        """Free list + refcounts sane: no duplicates, every entry in range,
+        set and list agree, and every non-free page has a live owner.
+        Cheap enough for tests to call between stress steps."""
         assert len(self._free) == len(self._free_set), (
-            "free list/set diverged (double-free or lost page)"
+            "free list/set diverged (double-release or lost page)"
         )
         assert self._free_set <= set(range(self.n_pages))
+        assert set(self.refs) == set(range(self.n_pages)) - self._free_set, (
+            "refcount map out of sync with the free list"
+        )
+        assert all(n >= 1 for n in self.refs.values())
+
+
+# ---------------------------------------------------------------------------
+# Prefix index (radix trie over page-sized token chunks)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefixClaim:
+    """Result of a successful prefix match at admission.
+
+    ``kind == "full"`` means the whole prompt (and its first sampled token)
+    is known — prefill is skipped entirely; ``kind == "partial"`` means the
+    leading ``matched_tokens`` (a page- and chunk-aligned span) are shared
+    device pages and the prefill seeds from them.  ``pages`` is the
+    request's complete logical page list (shared + fresh), ``restore``
+    carries ``(holder, host_page, device_page)`` triples for host-resident
+    prefix pages that still need a host→device copy.
+    """
+
+    kind: str
+    matched_tokens: int
+    pages: list[int]
+    restore: list = field(default_factory=list)
+    first_token: int = -1
+    state: object = None        # numpy recurrent-state snapshot (full match)
+    seed_pages: int = 0         # partial: leading shared device pages
+
+
+class _PrefixNode:
+    """One page-sized chunk of some prompt.  ``page`` is the resident
+    device page holding that chunk's KV rows (the index owns one allocator
+    reference to it), ``host_page`` a retired host-tier copy; either, both,
+    or neither may be set.  ``pending`` counts in-flight restores."""
+
+    __slots__ = ("children", "terminals", "page", "host_page", "pending",
+                 "last_used")
+
+    def __init__(self):
+        self.children: dict[bytes, _PrefixNode] = {}
+        self.terminals: dict[bytes, _Terminal] = {}
+        self.page: int | None = None
+        self.host_page: int | None = None
+        self.pending = 0
+        self.last_used = 0
+
+
+class _Terminal:
+    """A complete prompt ending at a node: the sub-page tail (``rem``
+    tokens on ``page``), the greedy first sampled token, and — for
+    recurrent families — a numpy snapshot of the post-prefill state."""
+
+    __slots__ = ("page", "host_page", "pending", "last_used", "rem",
+                 "first_token", "state", "length")
+
+    def __init__(self, rem: int, first_token: int, length: int, state):
+        self.page: int | None = None
+        self.host_page: int | None = None
+        self.pending = 0
+        self.last_used = 0
+        self.rem = rem
+        self.first_token = first_token
+        self.state = state
+        self.length = length
+
+
+class PrefixIndex:
+    """Radix trie over per-page prompt content → resident KV pages.
+
+    All mutation happens under the owning engine's lock; the decode loop
+    inserts finished prefills (:meth:`insert`), admission claims matches
+    (:meth:`claim` — shares device pages / books host restores), and
+    reclaim runs from both sides (:meth:`drop` is admission-safe release-
+    only; :meth:`retire` additionally copies cold pages into the host tier
+    and is decode-loop-only because it reads the device pools).
+
+    Families without seq-carrying cache leaves (pure-SSD: mamba2) index
+    prompts structurally and share by *state snapshot* at the terminal —
+    every claimed page is fresh.  Hybrid families (RG-LRU) share the seq
+    pages and restore state on full-terminal matches only.
+    """
+
+    _STAT_KEYS = ("hits", "misses", "hit_tokens", "lookup_tokens", "forks",
+                  "retired_pages", "restored_pages", "dropped_pages")
+
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 has_seq: bool, has_state: bool = False, host=None,
+                 metrics=None, max_terminals: int = 512):
+        from repro.obs.metrics import MetricsRegistry
+
+        self.allocator = allocator
+        self.page_size = page_size
+        self.has_seq = has_seq
+        self.has_state = has_state
+        self.host = host
+        self.max_terminals = max_terminals
+        self.root = _PrefixNode()
+        self.by_page: dict[int, object] = {}   # device page -> holder
+        self._terminals: list[tuple[_PrefixNode, bytes, _Terminal]] = []
+        self._clock = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c = {k: self.metrics.counter("prefix." + k)
+                   for k in self._STAT_KEYS}
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _keys(self, tokens) -> tuple[list[bytes], bytes]:
+        toks = np.asarray(tokens, np.int64)
+        ps = self.page_size
+        full = len(toks) // ps
+        chunks = [toks[i * ps:(i + 1) * ps].tobytes() for i in range(full)]
+        return chunks, toks[full * ps:].tobytes()
+
+    def _walk(self, tokens):
+        """Longest structurally-matched chain (content-resident for seq
+        families) plus the exact terminal when the whole prompt is known."""
+        chunk_keys, rem_key = self._keys(tokens)
+        node, chain = self.root, []
+        for k in chunk_keys:
+            child = node.children.get(k)
+            if child is None:
+                return chain, None
+            if self.has_seq and child.page is None and child.host_page is None:
+                return chain, None          # content dropped → unreachable
+            chain.append(child)
+            node = child
+        term = node.terminals.get(rem_key)
+        if (term is not None and self.has_seq and term.rem
+                and term.page is None and term.host_page is None):
+            term = None
+        return chain, term
+
+    def preview(self, tokens) -> int:
+        """Router affinity probe: resident-prefix tokens for ``tokens``
+        (no side effects, no allocation)."""
+        chain, term = self._walk(tokens)
+        if term is not None and len(chain) == len(tokens) // self.page_size:
+            return len(tokens)
+        if not self.has_seq or self.has_state:
+            return 0                # partial matches need seq-only caches
+        return len(chain) * self.page_size
+
+    # -- admission side (claim / drop) -------------------------------------
+
+    def _acquire_fresh(self, n: int) -> list[int] | None:
+        """Acquire with one drop-reclaim retry — admission must be able to
+        shrink the index itself, or a pool full of cold prefixes deadlocks
+        an idle engine (nothing running → no decode-side reclaim)."""
+        if n == 0:
+            return []
+        got = self.allocator.acquire(n)
+        if got is None and self.drop(n):
+            got = self.allocator.acquire(n)
+        return got
+
+    def claim(self, tokens, chunk: int) -> PrefixClaim | None:
+        """Match ``tokens`` against the index and take ownership for one
+        request: shares resident pages, acquires fresh ones for host
+        restores and the unmatched tail.  Returns None (no side effects)
+        on a miss or when the pool can't cover the fresh pages."""
+        L = len(tokens)
+        self._c["lookup_tokens"].inc(L)
+        claim = self._claim_inner(tokens, chunk) if L else None
+        if claim is None:
+            self._c["misses"].inc()
+        else:
+            self._c["hits"].inc()
+            self._c["hit_tokens"].inc(claim.matched_tokens)
+        return claim
+
+    def _claim_inner(self, tokens, chunk: int) -> PrefixClaim | None:
+        L = len(tokens)
+        ps = self.page_size
+        chain, term = self._walk(tokens)
+        full, rem = L // ps, L % ps
+        total = -(-(L + 1) // ps)          # pages incl. the decode slot
+        if term is not None and len(chain) == full:
+            holders = (list(chain) + ([term] if rem else [])
+                       if self.has_seq else [])
+            if (any(h.page is None for h in holders)
+                    and self.host is None):
+                term = None                 # host copy gone with the tier
+            else:
+                n_fresh = total - sum(1 for h in holders
+                                      if h.page is not None)
+                # pin the claim's own holders across the acquire: on a
+                # shortfall _acquire_fresh reclaims through drop(), which
+                # would otherwise evict exactly these cold pages and leave
+                # the fresh list short of the holders it nulled
+                for h in holders:
+                    h.pending += 1
+                try:
+                    got = self._acquire_fresh(n_fresh)
+                finally:
+                    for h in holders:
+                        h.pending -= 1
+                if got is None:
+                    return None
+                pages, restore, gi = [], [], 0
+                for h in holders:
+                    h.last_used = self._tick()
+                    if h.page is not None:
+                        self.allocator.share([h.page])
+                        pages.append(h.page)
+                    else:
+                        dev = got[gi]
+                        gi += 1
+                        h.pending += 1
+                        restore.append((h, h.host_page, dev))
+                        pages.append(dev)
+                pages.extend(got[gi:])
+                term.last_used = self._tick()
+                return PrefixClaim(
+                    kind="full", matched_tokens=L, pages=pages,
+                    restore=restore, first_token=term.first_token,
+                    state=term.state,
+                )
+        # partial: leading device-resident pages seed a chunked prefill.
+        # Attention-only families: a hybrid's recurrent state at token m is
+        # NOT reconstructable from seq pages alone, so state-carrying
+        # families only ever match full terminals (state snapshot in hand)
+        if not self.has_seq or self.has_state or chunk <= 0:
+            return None
+        dev_chain = 0
+        for node in chain:
+            if node.page is None:
+                break
+            dev_chain += 1
+        m = min(dev_chain * ps, L - 1)
+        m -= m % ps
+        while m > 0 and m % chunk:
+            m -= ps
+        if m < ps:
+            return None
+        k = m // ps
+        # same pin as the full path: drop()-reclaim inside the acquire must
+        # not evict the chain pages this claim is about to share
+        for i in range(k):
+            chain[i].pending += 1
+        try:
+            got = self._acquire_fresh(total - k)
+        finally:
+            for i in range(k):
+                chain[i].pending -= 1
+        if got is None:
+            return None
+        shared = [chain[i].page for i in range(k)]
+        self.allocator.share(shared)
+        for i in range(k):
+            chain[i].last_used = self._tick()
+        return PrefixClaim(kind="partial", matched_tokens=m,
+                           pages=shared + got, seed_pages=k)
+
+    def abort(self, claim: PrefixClaim) -> None:
+        """Undo the restore bookkeeping of an unconsumed claim (early
+        retire): holders stay host-resident, the fresh device pages ride
+        the request's page list into its release."""
+        for h, _hp, _dev in claim.restore:
+            h.pending -= 1
+
+    def finish_restore(self, claim: PrefixClaim) -> None:
+        """Device residency restored: adopt the fresh page into each holder
+        that is still without one (keeping the host copy — a future retire
+        is then free).  Runs under the lock after ``commit_swap_in``."""
+        for h, _hp, dev in claim.restore:
+            h.pending -= 1
+            if h.page is None:
+                self.allocator.share([dev])
+                h.page = dev
+                self.by_page[dev] = h
+            h.last_used = self._tick()
+        self._c["restored_pages"].inc(len(claim.restore))
+
+    def drop(self, n: int) -> int:
+        """Release up to ``n`` cold device-resident pages outright (no
+        host copy — content without a ``host_page`` is lost).  Admission-
+        safe: touches only the free list."""
+        freed = 0
+        for p, h in sorted(self.by_page.items(),
+                           key=lambda kv: kv[1].last_used):
+            if freed >= n:
+                break
+            if h.pending or self.allocator.refcount(p) != 1:
+                continue
+            self.allocator.release([p])
+            del self.by_page[p]
+            h.page = None
+            freed += 1
+        self._c["dropped_pages"].inc(freed)
+        return freed
+
+    # -- decode side (insert / retire) -------------------------------------
+
+    def insert(self, tokens, pages: list[int], state, first_token: int) -> None:
+        """Adopt a finished prefill's pages: walk/extend the trie, share
+        each chunk page into a node that lacks one, and register the
+        terminal (tail page + first greedy token + state snapshot).
+        Decode-loop-only, under the lock, after ``write_prefill``."""
+        L = len(tokens)
+        ps = self.page_size
+        full, rem = L // ps, L % ps
+        chunk_keys, rem_key = self._keys(tokens)
+        node = self.root
+        for i, key in enumerate(chunk_keys):
+            child = node.children.get(key)
+            if child is None:
+                child = node.children[key] = _PrefixNode()
+            if (self.has_seq and child.page is None
+                    and child.host_page is None and child.pending == 0):
+                p = pages[i]
+                self.allocator.share([p])
+                child.page = p
+                self.by_page[p] = child
+            child.last_used = self._tick()
+            node = child
+        term = node.terminals.get(rem_key)
+        if term is None:
+            if len(self._terminals) >= self.max_terminals:
+                self._evict_terminal()
+            term = _Terminal(rem=rem, first_token=first_token, length=L,
+                             state=state)
+            node.terminals[rem_key] = term
+            self._terminals.append((node, rem_key, term))
+            if rem and self.has_seq:
+                p = pages[full]
+                self.allocator.share([p])
+                term.page = p
+                self.by_page[p] = term
+        term.last_used = self._tick()
+
+    def _evict_terminal(self) -> None:
+        """LRU-evict one idle terminal (cap on state snapshots held)."""
+        idx = None
+        for i, (_node, _key, t) in enumerate(self._terminals):
+            if t.pending:
+                continue
+            if idx is None or t.last_used < self._terminals[idx][2].last_used:
+                idx = i
+        if idx is None:
+            return
+        node, key, t = self._terminals.pop(idx)
+        del node.terminals[key]
+        if t.page is not None:
+            del self.by_page[t.page]
+            self.allocator.release([t.page])
+        if t.host_page is not None and self.host is not None:
+            self.host.allocator.release([t.host_page])
+
+    def retire_candidates(self, n: int) -> list[tuple[int, object]]:
+        """Up to ``n`` cold sole-owned device pages without a host copy,
+        LRU first — the decode loop copies these out via ``put_pages``."""
+        cands = [(p, h) for p, h in self.by_page.items()
+                 if not h.pending and h.host_page is None
+                 and self.allocator.refcount(p) == 1]
+        cands.sort(key=lambda kv: kv[1].last_used)
+        return cands[:n]
+
+    def release_host_backed(self, n: int) -> int:
+        """Free up to ``n`` cold device pages that already have a host
+        copy — residency can be restored later at zero copy cost."""
+        freed = 0
+        for p, h in sorted(self.by_page.items(),
+                           key=lambda kv: kv[1].last_used):
+            if freed >= n:
+                break
+            if (h.pending or h.host_page is None
+                    or self.allocator.refcount(p) != 1):
+                continue
+            self.allocator.release([p])
+            del self.by_page[p]
+            h.page = None
+            freed += 1
+        self._c["retired_pages"].inc(freed)
+        return freed
+
+    def note_retired(self, entries) -> None:
+        """Commit a put_pages copy-out: mark holders host-resident and
+        release their device pages."""
+        for (p, h), hp in entries:
+            h.host_page = hp
+            self.allocator.release([p])
+            del self.by_page[p]
+            h.page = None
+        self._c["retired_pages"].inc(len(entries))
+
+    def note_fork(self, n: int = 1) -> None:
+        self._c["forks"].inc(n)
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +636,7 @@ class PagedKVCache:
 
     def __init__(self, model, lanes: int, n_pages: int, page_size: int,
                  max_len: int, host_pages: int = 0, host_shardings=None,
-                 metrics=None):
+                 metrics=None, prefix_sharing: bool = False):
         if not hasattr(model, "cache_page_specs"):
             raise TypeError(
                 f"{type(model).__name__} has no paged-cache layout "
@@ -202,14 +661,29 @@ class PagedKVCache:
 
             self.host = HostPagePool(self.pools, host_pages, page_size,
                                      metrics=metrics)
+        self.prefix = None
+        if prefix_sharing:
+            self.prefix = PrefixIndex(
+                self.allocator, page_size, has_seq=self._has_seq_leaves(),
+                has_state=self.has_state_leaves(),
+                host=self.host, metrics=metrics,
+            )
+
+    def _has_seq_leaves(self) -> bool:
+        found = []
+        jax.tree_util.tree_map_with_path(
+            lambda path, x: found.append(1) if _is_seq(path) else None,
+            self.pools,
+        )
+        return bool(found)
 
     # -- host-side bookkeeping ---------------------------------------------
 
     def pages_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.page_size)
 
-    def alloc(self, n_tokens: int) -> list[int] | None:
-        return self.allocator.alloc(self.pages_for(n_tokens))
+    def acquire(self, n_tokens: int) -> list[int] | None:
+        return self.allocator.acquire(self.pages_for(n_tokens))
 
     @pool_mutator("pools")
     def assign_lane(self, lane: int, pages: list[int]) -> None:
@@ -229,42 +703,66 @@ class PagedKVCache:
 
     def check_invariant(self) -> None:
         """Pool/table consistency: the free lists are sane, no physical page
-        is mapped by two lanes, and no mapped page sits in the free list.
-        Cheap (one pass over a lanes x pages_per_lane int table); the
-        sanitizer runs it after every mutating op, tests at checkpoints."""
+        is mapped by more lanes than it has owners, and no mapped page sits
+        in the free list.  Cheap (one pass over a lanes x pages_per_lane int
+        table); the sanitizer runs it after every mutating op, tests at
+        checkpoints."""
         self.allocator.check_invariant()
         mapped = self.block_tables[self.block_tables >= 0].tolist()
-        assert len(set(mapped)) == len(mapped), (
-            "page mapped by two lanes (block-table aliasing)"
-        )
+        counts: dict[int, int] = {}
+        for p in mapped:
+            counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            assert c <= self.allocator.refcount(p), (
+                f"page {p} mapped by {c} lanes with refcount "
+                f"{self.allocator.refcount(p)} (block-table aliasing)"
+            )
         stale = set(mapped) & self.allocator._free_set
         assert not stale, f"free pages still mapped by a lane: {sorted(stale)}"
+        if self.prefix is not None:
+            for p, h in self.prefix.by_page.items():
+                assert h.page == p, "prefix index reverse map out of sync"
+                assert self.allocator.refcount(p) >= 1, (
+                    f"prefix index holds freed page {p}"
+                )
         if self.host is not None:
             self.host.allocator.check_invariant()
 
     # -- eager (per-request) writes ----------------------------------------
 
     @pool_mutator("pools")
-    def write_prefill(self, pages: list[int], cache, lane: int | None = None):
+    def write_prefill(self, pages: list[int], cache, lane: int | None = None,
+                      skip_pages: int = 0):
         """Scatter a prefill cache (leaves (layers, 1, s, *t)) into
         ``pages``; state leaves go to ``lane``'s row when given.  Seq leaves
         shorter than the page span are zero-padded; longer ones (a chunked
         prefill's capacity-length private tree) are sliced — positions past
-        the reserved pages are unwritten zeros by construction."""
+        the reserved pages are unwritten zeros by construction.
+
+        ``skip_pages`` leading pages are left untouched: a partial prefix
+        match seeded the prefill from those *shared* pages, whose pool
+        content is already bit-identical (and co-owned by other lanes)."""
         ps = self.page_size
-        pages_arr = jnp.asarray(pages, jnp.int32)
+        dst = pages[skip_pages:]
+        if not dst and lane is None:
+            return
+        pages_arr = jnp.asarray(dst, jnp.int32)
 
         def leaf(path, pool, pc):
             if _is_seq(path):
-                reps, s = pc.shape[0], pc.shape[2]
-                cap = len(pages) * ps
+                if not dst:
+                    return pool
+                reps = pc.shape[0]
+                pc = pc[:, :, skip_pages * ps:]
+                s = pc.shape[2]
+                cap = len(dst) * ps
                 if s > cap:
                     pc = pc[:, :, :cap]
                 else:
                     pad = [(0, 0)] * pc.ndim
                     pad[2] = (0, cap - s)
                     pc = jnp.pad(pc, pad)
-                paged = pc.reshape((reps, len(pages), ps) + pc.shape[3:])
+                paged = pc.reshape((reps, len(dst), ps) + pc.shape[3:])
                 return pool.at[:, pages_arr].set(paged.astype(pool.dtype))
             if lane is None:
                 return pool
@@ -364,3 +862,115 @@ class PagedKVCache:
 
     def host_occupancy(self) -> float:
         return self.host.occupancy() if self.host is not None else 0.0
+
+    # -- prefix sharing (radix index + copy-on-write) ----------------------
+
+    @admission_api
+    def claim_match(self, tokens, chunk: int):
+        """Admission-side prefix lookup: a :class:`PrefixClaim` with pages
+        already owned by the request (shared + fresh), or None.  Under the
+        engine lock."""
+        if self.prefix is None or not len(tokens):
+            return None
+        return self.prefix.claim(tokens, chunk)
+
+    @admission_api
+    def seed_prefix(self, tree, pages: list[int]):
+        """Copy ``pages``' pool rows into positions ``[0, len(pages)*ps)``
+        of a private prefill tree (admission thread).  Pure: reads a
+        snapshot of ``self.pools`` — shared prefix pages are never written
+        in place (copy-on-write), so the read races with nothing."""
+        ps = self.page_size
+        idx = jnp.asarray(pages, jnp.int32)
+        span = len(pages) * ps
+
+        def leaf(path, pc, pool):
+            if not _is_seq(path):
+                return pc
+            take = jnp.take(pool, idx, axis=1)   # (layers, P, ps, *t)
+            flat = take.reshape(
+                (take.shape[0], 1, span) + take.shape[3:]
+            )
+            return pc.at[:, :, :span].set(flat.astype(pc.dtype))
+
+        return jax.tree_util.tree_map_with_path(leaf, tree, self.pools)
+
+    def snapshot_state(self, cache):
+        """Numpy copy of the recurrent-state leaves of a prefill tree for
+        the prefix index (seq leaves become 0-d placeholders, mirroring
+        ``SwapHandle.state``); None for stateless families.  Device reads —
+        call outside the lock."""
+        if not self.has_state_leaves():
+            return None
+        return jax.tree_util.tree_map_with_path(
+            lambda path, x: (np.zeros((), x.dtype) if _is_seq(path)
+                             else np.asarray(x)),
+            cache,
+        )
+
+    @pool_mutator("pools")
+    def fork_pages(self, copies: list[tuple[int, int]]) -> None:
+        """Device half of copy-on-write: duplicate each ``(src, dst)``
+        page's rows in every seq-leaf pool — one gather+scatter per leaf
+        for the whole fork batch."""
+        if not copies:
+            return
+        src = jnp.asarray([a for a, _ in copies], jnp.int32)
+        dst = jnp.asarray([b for _, b in copies], jnp.int32)
+
+        def leaf(path, pool):
+            if not _is_seq(path):
+                return pool
+            return pool.at[:, dst].set(jnp.take(pool, src, axis=1))
+
+        self.pools = jax.tree_util.tree_map_with_path(leaf, self.pools)
+
+    def prefix_insert(self, tokens, pages, state, first_token: int) -> None:
+        """Adopt a finished prefill into the index (decode loop, under the
+        lock, after ``write_prefill``)."""
+        if self.prefix is not None:
+            self.prefix.insert(tokens, pages, state, first_token)
+
+    def prefix_drop(self, n: int) -> int:
+        """Admission-safe index shrink: release cold pages outright."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.drop(n)
+
+    def prefix_retire(self, n: int) -> int:
+        """Decode-side index shrink: free host-backed cold pages first
+        (zero-copy), then copy the coldest unbacked pages into the host
+        tier via one device→host read per leaf; falls back to dropping
+        content when the host tier is absent or exhausted.  Returns pages
+        returned to the free list."""
+        if self.prefix is None:
+            return 0
+        freed = self.prefix.release_host_backed(n)
+        if freed >= n:
+            return freed
+        if self.host is None or not self.prefix.has_seq:
+            return freed + self.prefix.drop(n - freed)
+        cands = self.prefix.retire_candidates(n - freed)
+        if cands:
+            host_pages = self.host.put_pages(
+                self.pools, [p for p, _h in cands]
+            )
+            if host_pages is None:
+                return freed + self.prefix.drop(n - freed)
+            self.prefix.note_retired(list(zip(cands, host_pages)))
+            freed += len(cands)
+        if freed < n:
+            freed += self.prefix.drop(n - freed)
+        return freed
+
+    def prefix_finish_restore(self, claim) -> None:
+        """Flip restored holders back to device-resident (under the lock,
+        after ``commit_swap_in`` of the staged prefix pages)."""
+        if self.prefix is not None:
+            self.prefix.finish_restore(claim)
+
+    def abort_match(self, claim) -> None:
+        """Drop the restore bookkeeping of a claim that retires before its
+        lane fill (early EOS on the stored first token)."""
+        if self.prefix is not None:
+            self.prefix.abort(claim)

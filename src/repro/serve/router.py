@@ -6,9 +6,14 @@ that host: one paged ``ServeEngine`` per cube slot along ``CUBE_AXIS``
 (coefficients replicated per cube, KV pages local to the cube), requests
 spread by
 
-* ``hash``         — uid-stable assignment, no coordination state at all;
-* ``least_loaded`` — queue-depth telemetry picks the emptiest cube (the
-  dataflow-aware choice under mixed-length traffic).
+* ``hash``            — uid-stable assignment, no coordination state at all;
+* ``least_loaded``    — queue-depth telemetry picks the emptiest cube (the
+  dataflow-aware choice under mixed-length traffic);
+* ``prefix_affinity`` — the cube whose prefix index already holds the
+  longest resident prefix of the prompt wins (ties broken least-loaded;
+  falls back to least-loaded on a universal miss).  Keeps shared-prompt
+  traffic landing where its KV pages already live — only useful with
+  ``CacheConfig.prefix_sharing`` on.
 
 On the 1-device CPU test host every cube's sharding degrades to replication
 via ``dist.sharding.cube_rules``; the routing logic and telemetry are
@@ -27,7 +32,7 @@ class CubeRouter:
 
     def __init__(self, model, params, ecfg: EngineConfig, n_cubes: int = 2,
                  policy: str = "least_loaded", rules=None, mesh=None):
-        if policy not in ("hash", "least_loaded"):
+        if policy not in ("hash", "least_loaded", "prefix_affinity"):
             raise ValueError(f"unknown router policy: {policy!r}")
         if rules is None:
             from repro.dist.sharding import cube_rules
@@ -64,6 +69,16 @@ class CubeRouter:
         if self.policy == "hash":
             return req.uid % self.n_cubes
         loads = [e.load for e in self.engines]
+        if self.policy == "prefix_affinity":
+            match = [e.prefix_match_tokens(req.prompt)
+                     for e in self.engines]
+            best = max(match)
+            if best > 0:
+                # longest resident prefix wins; ties go least-loaded
+                return int(min(
+                    (i for i in range(self.n_cubes) if match[i] == best),
+                    key=loads.__getitem__,
+                ))
         return int(min(range(self.n_cubes), key=loads.__getitem__))
 
     def submit(self, req: Request) -> int:

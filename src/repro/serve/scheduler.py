@@ -5,8 +5,11 @@ swap methods.  Requests move through an explicit state machine::
 
     waiting ──admit──▶ admitting(phase='prefill')  ──▶ ready ──▶ running
         │                 (prefill chunks run)           ▲
-        └──admit──▶ admitting(phase='restore') ──stage───┘
-                      (host-tier DMA, no compute)
+        ├──admit──▶ admitting(phase='restore') ──stage───┤
+        │             (host-tier DMA, no compute)        │
+        └──admit──▶ admitting(phase='match') ──hit───────┘
+                      (full prefix-cache hit: prefill skipped; only
+                       host-resident prefix pages need staging)
 
 Admission *reserves* pages up front (the whole prompt + one decode slot,
 or the swapped page count), so an admitted request can always finish its
@@ -86,7 +89,7 @@ class RequestState:
     # construction-time phase write already emits through it
     tracer: ServeTracer = NULL_TRACER
     submit_ts: float = 0.0          # queue-wait clock: (re)entered waiting
-    phase: str = "waiting"          # waiting|prefill|restore|ready|running
+    phase: str = "waiting"          # waiting|match|prefill|restore|ready|running
     pages: list = field(default_factory=list)
     lane: int = -1
     prefilled: int = 0              # resume_tokens already written
@@ -105,6 +108,10 @@ class RequestState:
     swapped: bool = False           # pages live in the host tier
     swap_handle: object = None      # host_tier.SwapHandle (survives resume:
     #                                 its clean prefix skips recopies)
+    prefix_claim: object = None     # paged_cache.PrefixClaim (pages shared /
+    #                                 restores booked at admission)
+    prefix_staged: object = None    # (staged_tree, device_pages) awaiting the
+    #                                 decode loop's scatter (prefix restore)
 
     @property
     def remaining_prefill(self) -> int:
@@ -157,6 +164,10 @@ class Scheduler:
         # high-water mark survives in max_preemptions_per_request
         self.preemptions_by_uid: dict[int, int] = {}
         self.max_preemptions_per_request = 0
+        # prefix-cache hit telemetry, same retire-folded lifecycle as the
+        # preemption counters (live entries cleared per uid on retire)
+        self.prefix_hit_tokens_by_uid: dict[int, int] = {}
+        self.max_prefix_hit_tokens = 0
 
     # -- queue accounting ---------------------------------------------------
 
@@ -175,11 +186,14 @@ class Scheduler:
         return len(self.waiting)
 
     def retire_uid(self, uid: int) -> None:
-        """Drop the per-uid preemption counter (fold into the high-water
-        mark) so long-lived engines don't accumulate one entry per request."""
+        """Drop the per-uid counters (fold into their high-water marks) so
+        long-lived engines don't accumulate one entry per request."""
         n = self.preemptions_by_uid.pop(uid, 0)
         if n > self.max_preemptions_per_request:
             self.max_preemptions_per_request = n
+        t = self.prefix_hit_tokens_by_uid.pop(uid, 0)
+        if t > self.max_prefix_hit_tokens:
+            self.max_prefix_hit_tokens = t
 
     # -- admission ----------------------------------------------------------
 
@@ -220,7 +234,7 @@ class Scheduler:
             # token of progress
             n = len(nxt.swap_handle.host_pages)
             extra = 1 if n * cache.page_size <= nxt.length else 0
-            pages = cache.allocator.alloc(n + extra)
+            pages = cache.allocator.acquire(n + extra)
             if pages is None:
                 return None
             st = self.waiting.pop(i)
@@ -228,17 +242,39 @@ class Scheduler:
             sanitizer.note_grant(st, pages, cache.allocator)
             st.phase = "restore"
         else:
-            pages = cache.alloc(len(nxt.resume_tokens) + 1)
-            if pages is None:
-                return None
-            st = self.waiting.pop(i)
-            st.pages = pages
-            sanitizer.note_grant(st, pages, cache.allocator)
-            st.prefilled = 0
-            st.phase = "prefill"
+            claim = cache.claim_match(nxt.resume_tokens,
+                                      self.cfg.prefill_chunk)
+            if claim is not None:
+                st = self.waiting.pop(i)
+                st.pages = claim.pages
+                st.prefix_claim = claim
+                sanitizer.note_grant(st, claim.pages, cache.allocator)
+                self._note_prefix_hit(st, claim.matched_tokens)
+                if claim.kind == "full":
+                    st.prefilled = len(st.resume_tokens)
+                    st.phase = "match"
+                else:
+                    st.prefilled = claim.matched_tokens
+                    st.phase = "prefill"
+            else:
+                pages = cache.acquire(len(nxt.resume_tokens) + 1)
+                if pages is None:
+                    return None
+                st = self.waiting.pop(i)
+                st.pages = pages
+                sanitizer.note_grant(st, pages, cache.allocator)
+                st.prefilled = 0
+                st.phase = "prefill"
         self.admitting.append(st)
         self.tracer.instant(self.tracer.EV_ADMIT, st.req.uid, len(st.pages))
         return st
+
+    def _note_prefix_hit(self, st: RequestState, tokens: int) -> None:
+        uid = st.req.uid
+        self.prefix_hit_tokens_by_uid[uid] = (
+            self.prefix_hit_tokens_by_uid.get(uid, 0) + tokens
+        )
+        self.tracer.instant(self.tracer.EV_PREFIX_HIT, uid, tokens)
 
     def admissions(self, cache, budget: int) -> list[RequestState]:
         """Admit while pages, the token budget, and the in-flight bound
@@ -332,7 +368,9 @@ class Scheduler:
         modes = []
         for st, mode in plan:
             cache.clear_lane(st.lane)
-            cache.allocator.free(st.pages)
+            # shared prefix pages survive the victim: release drops one
+            # owner and only sole-owned pages return to the free list
+            cache.allocator.release(st.pages)
             sanitizer.note_release(st)
             del self.running[st.lane]
             st.pages = []

@@ -29,7 +29,7 @@ from repro.analysis.lint import DEFAULT_BASELINE, lint_paths, run_rules
 from repro.analysis.ownership import decode_loop_only, pool_mutator
 from repro.analysis.phases import PHASE_EDGES, PHASE_WRITERS, check_phase_edge
 from repro.analysis.rules import ALL_RULE_IDS
-from repro.serve.paged_cache import PageAllocator
+from repro.serve import PageAllocator
 
 REPO = Path(__file__).resolve().parent.parent
 FIXTURES = REPO / "tests" / "analysis_fixtures"
@@ -235,36 +235,36 @@ def test_sanitizer_enforces_free_list_lock(sanitize):
     eng = _MiniEngine()
     sanitizer.register_engine(eng)
     with pytest.raises(sanitizer.SanitizerError, match="lock"):
-        eng.cache.allocator.alloc(1)
+        eng.cache.allocator.acquire(1)
     with eng._lock:
-        pages = eng.cache.allocator.alloc(1)
+        pages = eng.cache.allocator.acquire(1)
         assert pages is not None
-        eng.cache.allocator.free(pages)
+        eng.cache.allocator.release(pages)
 
 
 def test_sanitizer_catches_double_free(sanitize):
     alloc = PageAllocator(4)                 # standalone: no lock registered
-    pages = alloc.alloc(2)
-    alloc.free(pages)
+    pages = alloc.acquire(2)
+    alloc.release(pages)
     with pytest.raises(sanitizer.SanitizerError, match="double free"):
-        alloc.free([pages[0]])
+        alloc.release([pages[0]])
 
 
 def test_sanitizer_catches_use_after_free(sanitize):
     cache = _MiniCache()
-    pages = cache.allocator.alloc(2)
-    cache.allocator.free(pages)
+    pages = cache.allocator.acquire(2)
+    cache.allocator.release(pages)
     with pytest.raises(sanitizer.SanitizerError, match="use-after-free"):
         cache.touch(pages)
 
 
 def test_sanitizer_catches_stale_page_aba(sanitize):
     alloc = PageAllocator(2)
-    st = SimpleNamespace(pages=alloc.alloc(1))
+    st = SimpleNamespace(pages=alloc.acquire(1))
     sanitizer.note_grant(st, st.pages, alloc)
     sanitizer.verify_grant(st, alloc)        # fresh grant — fine
-    alloc.free(st.pages)                     # preemption frees the page...
-    other = alloc.alloc(1)                   # ...and it is re-issued (LIFO)
+    alloc.release(st.pages)                     # preemption frees the page...
+    other = alloc.acquire(1)                   # ...and it is re-issued (LIFO)
     assert other == st.pages                 # same id, new generation
     with pytest.raises(sanitizer.SanitizerError, match="stale page"):
         sanitizer.verify_grant(st, alloc)    # stale list still names it
@@ -278,11 +278,11 @@ def test_sanitizer_runs_check_invariant_after_mutation(sanitize):
 
     alloc = Broken(2)
     with pytest.raises(AssertionError, match="seeded"):
-        alloc.alloc(1)
+        alloc.acquire(1)
 
 
 def test_sanitizer_validates_phase_edges(sanitize):
-    from repro.serve.scheduler import RequestState
+    from repro.serve import RequestState
 
     req = SimpleNamespace(uid=7)
     st = RequestState(req=req, resume_tokens=np.asarray([1, 2], np.int32))
@@ -301,7 +301,7 @@ def test_sanitizer_disabled_is_silent():
     if sanitizer.enabled():
         pytest.skip("suite running under REPRO_SANITIZE=1")
     alloc = PageAllocator(2)
-    pages = alloc.alloc(1)
-    alloc.free(pages)
+    pages = alloc.acquire(1)
+    alloc.release(pages)
     with pytest.raises(AssertionError):      # the allocator's own assert
-        alloc.free(pages)
+        alloc.release(pages)

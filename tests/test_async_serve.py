@@ -23,7 +23,7 @@ import pytest
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.models.common import AxisRules, DEFAULT_RULES
-from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve import EngineConfig, Request, ServeEngine
 
 RULES = AxisRules(DEFAULT_RULES)
 
@@ -55,24 +55,35 @@ def _reqs(cfg, n, plen=7, max_new=9, seed=3):
 
 
 def _page_partition_ok(eng):
-    """No page double-allocated across threads: every device page is held
-    by exactly one live request or sits in the free list — never both,
-    never twice.  Snapshot under the engine lock (the allocator's own
-    transitions are lock-atomic; observing without it would race)."""
+    """No page over-allocated across threads: a live page is held by no
+    more owners (requests + the prefix index) than its refcount records,
+    and never sits in the free list at the same time.  Snapshot under the
+    engine lock (the allocator's own transitions are lock-atomic;
+    observing without it would race)."""
     with eng._lock:
         s = eng.sched
+        alloc = eng.cache.allocator
         held = []
         for st in (list(s.waiting) + list(s.admitting) + list(s.ready)
                    + list(s.running.values())):
             held.extend(st.pages)
-        free = list(eng.cache.allocator._free)
-        eng.cache.allocator.check_invariant()
+        index_held = (list(eng.cache.prefix.by_page)
+                      if eng.cache.prefix is not None else [])
+        free = list(alloc._free)
+        counts: dict[int, int] = {}
+        for p in held + index_held:
+            counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            assert c <= alloc.refcount(p), (
+                f"page {p} held by {c} owners with refcount "
+                f"{alloc.refcount(p)}"
+            )
+        alloc.check_invariant()
+        eng.cache.check_invariant()
         if eng.cache.host is not None:
             eng.cache.host.allocator.check_invariant()
-    combined = held + free
-    assert len(set(held)) == len(held), f"page held twice: {sorted(held)}"
     assert not set(held) & set(free), "page simultaneously held and free"
-    assert set(combined) <= set(range(eng.cache.n_pages))
+    assert set(held + free) <= set(range(eng.cache.n_pages))
 
 
 def _stress(model, params, cfg, async_on, n=8, seed=3, inflight=2,
@@ -132,17 +143,17 @@ def test_async_stress_seeds_and_inflight_sweep():
 
 
 def test_allocator_rejects_double_free():
-    from repro.serve.paged_cache import PageAllocator
+    from repro.serve import PageAllocator
 
     from repro.analysis.sanitizer import SanitizerError
 
     alloc = PageAllocator(4)
-    pages = alloc.alloc(2)
-    alloc.free(pages)
+    pages = alloc.acquire(2)
+    alloc.release(pages)
     # under REPRO_SANITIZE=1 the sanitizer's epoch table trips first
     # (SanitizerError); otherwise the allocator's own membership assert does
     with pytest.raises((AssertionError, SanitizerError)):
-        alloc.free([pages[0]])
+        alloc.release([pages[0]])
     alloc.check_invariant()
 
 
@@ -205,6 +216,7 @@ def test_retire_clears_held_buffers_and_uid_counters():
     cfg, model, params = _family_model("qwen2.5-3b")
     got, eng = _stress(model, params, cfg, async_on=True)
     assert eng.sched.preemptions_by_uid == {}          # cleared on retire
+    assert eng.sched.prefix_hit_tokens_by_uid == {}    # same retire contract
     assert eng.sched.n_preemptions > 0
     assert eng.telemetry()["max_request_preemptions"] > 0
     # no RequestState left holding device buffers

@@ -242,7 +242,7 @@ def test_wire_snapshot_roundtrip_through_collectives():
 
 
 def test_sanitizer_phase_finding_lands_in_trace():
-    from repro.serve.scheduler import RequestState
+    from repro.serve import RequestState
 
     class _Req:
         uid = 7
@@ -284,7 +284,7 @@ PRESSURE = dict(batch_slots=3, max_len=32, page_size=4, n_pages=7,
 
 
 def _reqs(cfg, n, plen=7, max_new=6, seed=3):
-    from repro.serve.engine import Request
+    from repro.serve import Request
 
     rng = np.random.default_rng(seed)
     return [
@@ -298,7 +298,7 @@ def _reqs(cfg, n, plen=7, max_new=6, seed=3):
 
 def _run(model, params, cfg, n=5, plen=7, max_new=6, **ecfg_kw):
     from repro.models.common import AxisRules, DEFAULT_RULES
-    from repro.serve.engine import EngineConfig, ServeEngine
+    from repro.serve import EngineConfig, ServeEngine
 
     eng = ServeEngine(model, params, EngineConfig(**ecfg_kw),
                       AxisRules(DEFAULT_RULES))
@@ -397,8 +397,7 @@ def test_trace_annotations_smoke(small_model):
 
 def test_router_telemetry_isolation_under_churn(small_model, tmp_path):
     cfg, model, params = small_model
-    from repro.serve.engine import EngineConfig
-    from repro.serve.router import CubeRouter
+    from repro.serve import CubeRouter, EngineConfig
 
     router = CubeRouter(model, params,
                         EngineConfig(batch_slots=2, max_len=32, trace=True),

@@ -1,0 +1,313 @@
+"""Prefix sharing + copy-on-write: ownership invariants and bit-exactness.
+
+The load-bearing invariants of the redesigned page-ownership API:
+
+* refcounts are exact: ``share`` adds owners, ``release`` drops them and
+  frees only at zero, ``fork_for_write`` exchanges a shared reference for a
+  private page — and every misuse (double release, share-after-free) trips
+  an assert at the call site, not as token corruption later;
+* serving a prompt from radix-indexed resident pages is bit-identical to
+  re-prefilling it (greedy), on every paged cache family — attention-only,
+  MLA, pure-SSD (state-snapshot sharing), and hybrid (full-terminal
+  matches only);
+* retiring cold prefix pages into the host tier and restoring them on the
+  next match is bit-exact round-trip;
+* shared pages survive preemption pressure: the index's references keep
+  content alive across swap-out/recompute of the co-owning lanes, and the
+  pool partition stays sane under the cross-thread stress;
+* telemetry: hit counters are per-request-bounded, and per-uid hit tallies
+  do not outlive the request (the retire contract).
+
+The whole file also runs under ``REPRO_SANITIZE=1`` in CI, where the page
+epoch table and the refcount mirror cross-check every transition.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import SanitizerError
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.models.common import AxisRules, DEFAULT_RULES
+from repro.serve import (
+    AdmissionConfig,
+    CacheConfig,
+    EngineConfig,
+    PageAllocator,
+    Request,
+    ServeEngine,
+)
+
+RULES = AxisRules(DEFAULT_RULES)
+
+PAGED_FAMILIES = ["qwen2.5-3b", "deepseek-v3-671b", "mamba2-130m",
+                  "recurrentgemma-9b"]
+
+
+def _family_model(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(dataclasses.replace(cfg, decode_unroll_layers=False))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(model, prefix, params, host_pages=None, n_pages=24, lanes=2,
+            page_size=4, max_len=64):
+    return ServeEngine(model, params, EngineConfig(
+        batch_slots=lanes, max_len=max_len,
+        cache=CacheConfig(page_size=page_size, n_pages=n_pages,
+                          host_pages=host_pages, prefix_sharing=prefix),
+    ), RULES)
+
+
+def _prompts(cfg, n=2, plen=10, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(plen + i,)).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve_rounds(eng, rounds, max_new=5):
+    """Serve each round (a list of prompts) to completion before the next —
+    insertion into the index is deterministic, so later rounds' repeat
+    prompts are guaranteed resident matches."""
+    out = {}
+    uid = 0
+    for prompts in rounds:
+        for p in prompts:
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+            uid += 1
+        done = eng.run()
+        out.update({r.uid: list(r.out_tokens) for r in done})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Allocator ownership API (host-side unit tests)
+# ---------------------------------------------------------------------------
+
+
+def test_release_frees_only_at_zero():
+    alloc = PageAllocator(6)
+    pages = alloc.acquire(3)
+    alloc.share(pages)                       # refcount 2 each
+    assert alloc.release(pages) == []        # co-owner survives
+    assert alloc.n_free == 3
+    assert sorted(alloc.release(pages)) == sorted(pages)
+    assert alloc.n_free == 6
+    alloc.check_invariant()
+
+
+def test_double_release_trips():
+    alloc = PageAllocator(4)
+    pages = alloc.acquire(2)
+    alloc.release(pages)
+    # under REPRO_SANITIZE=1 the epoch table trips first (SanitizerError);
+    # otherwise the allocator's own free-membership assert does
+    with pytest.raises((AssertionError, SanitizerError)):
+        alloc.release([pages[0]])
+    alloc.check_invariant()
+
+
+def test_share_after_free_trips():
+    alloc = PageAllocator(4)
+    (p,) = alloc.acquire(1)
+    alloc.release([p])
+    with pytest.raises((AssertionError, SanitizerError)):
+        alloc.share([p])
+    alloc.check_invariant()
+
+
+def test_fork_then_release_ordering():
+    alloc = PageAllocator(4)
+    (p,) = alloc.acquire(1)
+    alloc.share([p])                         # two owners
+    q = alloc.fork_for_write(p)              # owner A goes private
+    assert q != p and alloc.refcount(p) == 1 and alloc.refcount(q) == 1
+    assert alloc.fork_for_write(q) == q      # sole owner forks in place
+    # the other owner's release now frees the original page
+    assert alloc.release([p]) == [p]
+    assert alloc.release([q]) == [q]
+    assert alloc.n_free == 4
+    alloc.check_invariant()
+
+
+def test_fork_exhaustion_leaves_ownership_intact():
+    alloc = PageAllocator(2)
+    pages = alloc.acquire(2)
+    alloc.share([pages[0]])
+    assert alloc.fork_for_write(pages[0]) is None     # pool can't cover it
+    assert alloc.refcount(pages[0]) == 2              # nothing leaked
+    alloc.release(pages)
+    alloc.release([pages[0]])
+    assert alloc.n_free == 2
+    alloc.check_invariant()
+
+
+# ---------------------------------------------------------------------------
+# Token identity: cached-prefix serving == re-prefill serving, all families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", PAGED_FAMILIES)
+def test_prefix_on_off_token_identical(arch):
+    cfg, model, params = _family_model(arch)
+    a, b = _prompts(cfg, 2)
+    rounds = [[a, b], [a, a, b], [a]]        # seeding round, then replays
+    want = _serve_rounds(_engine(model, False, params), rounds)
+    eng = _engine(model, True, params)
+    got = _serve_rounds(eng, rounds)
+    assert want == got
+    tel = eng.telemetry()
+    # the replays actually hit the index (full-terminal matches work on
+    # every family — pure-SSD shares the state snapshot, not pages)
+    assert tel["prefix"]["hits"] >= 4
+    assert tel["prefix"]["hit_rate"] > 0.0
+    eng.cache.check_invariant()
+    # every page released by retired requests; index references remain
+    held_by_index = len(eng.cache.prefix.by_page)
+    assert eng.cache.allocator.n_free == eng.cache.n_pages - held_by_index
+
+
+def test_cow_fork_preserves_cached_content():
+    """A replayed prompt's decode writes land in a forked tail page, never
+    in the shared one — a third replay still matches bit-for-bit."""
+    cfg, model, params = _family_model("qwen2.5-3b")
+    (a,) = _prompts(cfg, 1)                  # plen 10 on ps 4: sub-page tail
+    want = _serve_rounds(_engine(model, False, params), [[a], [a], [a]])
+    eng = _engine(model, True, params)
+    got = _serve_rounds(eng, [[a], [a], [a]])
+    assert want == got
+    tel = eng.telemetry()
+    assert tel["prefix"]["forks"] >= 2       # each replay forked its tail
+    assert tel["prefix"]["hits"] >= 2
+    eng.cache.check_invariant()
+
+
+# ---------------------------------------------------------------------------
+# Host-tier retire / restore round-trip (bit-exactness per family)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", PAGED_FAMILIES)
+def test_prefix_retire_restore_bit_exact(arch):
+    cfg, model, params = _family_model(arch)
+    a, b = _prompts(cfg, 2)
+    rounds = [[a, b], [a, b]]
+    want = _serve_rounds(_engine(model, False, params), rounds)
+    eng = _engine(model, True, params, host_pages=32)
+    got = {}
+    uid = 0
+    for i, prompts in enumerate(rounds):
+        if i:
+            # retire every cold prefix page into the host tier (decode-side
+            # path: one device->host copy per leaf); the replays must then
+            # restore residency and still match bit-for-bit
+            with eng._lock:
+                before = len(eng.cache.prefix.by_page)
+                freed = eng.cache.prefix_retire(eng.cache.n_pages)
+            if eng.cache.prefix.has_seq:
+                assert before > 0 and freed == before
+                assert not eng.cache.prefix.by_page   # all device refs gone
+        for p in prompts:
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=5))
+            uid += 1
+        done = eng.run()
+        got.update({r.uid: list(r.out_tokens) for r in done})
+    assert want == got
+    tel = eng.telemetry()
+    assert tel["prefix"]["hits"] >= 2
+    if eng.cache.prefix.has_seq:
+        assert tel["prefix"]["retired_pages"] > 0
+        assert tel["prefix"]["restored_pages"] > 0
+    eng.cache.check_invariant()
+    if eng.cache.host is not None:
+        eng.cache.host.allocator.check_invariant()
+
+
+# ---------------------------------------------------------------------------
+# Preemption pressure with shared pages (cross-thread stress)
+# ---------------------------------------------------------------------------
+
+
+def _pressure_stress(model, cfg, params, prefix, n=8, seed=3):
+    """Duplicate-heavy arrivals on a pool sized to run dry mid-decode:
+    preemption, restore, CoW forks, and index reclaim all fire while the
+    admission pipeline races the decode loop."""
+    eng = ServeEngine(model, params, EngineConfig(
+        batch_slots=3, max_len=32,
+        cache=CacheConfig(page_size=4, n_pages=9, swap_token_cost=0.0,
+                          prefix_sharing=prefix),
+        admission=AdmissionConfig(prefill_chunk=3, async_prefill=True),
+    ), RULES)
+    rng = np.random.default_rng(seed)
+    bases = [rng.integers(0, cfg.vocab_size, size=(7 + k,)).astype(np.int32)
+             for k in range(2)]
+    reqs = [Request(uid=i, prompt=bases[i % 2], max_new_tokens=9)
+            for i in range(n)]
+    i, step = 0, 0
+    while i < len(reqs) or eng.load:
+        if i < len(reqs) and step % 2 == 0:
+            eng.submit(reqs[i])
+            i += 1
+        eng.step()
+        if prefix:
+            _partition_ok(eng)
+        step += 1
+    eng.pipeline.shutdown()
+    return {r.uid: list(r.out_tokens) for r in reqs}, eng
+
+
+def _partition_ok(eng):
+    with eng._lock:
+        s = eng.sched
+        alloc = eng.cache.allocator
+        held = []
+        for st in (list(s.waiting) + list(s.admitting) + list(s.ready)
+                   + list(s.running.values())):
+            held.extend(st.pages)
+        index_held = list(eng.cache.prefix.by_page)
+        counts: dict[int, int] = {}
+        for p in held + index_held:
+            counts[p] = counts.get(p, 0) + 1
+        for p, c in counts.items():
+            assert c <= alloc.refcount(p), (
+                f"page {p} held by {c} owners with refcount "
+                f"{alloc.refcount(p)}"
+            )
+        alloc.check_invariant()
+        eng.cache.check_invariant()
+
+
+def test_shared_pages_survive_preemption_pressure():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    want, _ = _pressure_stress(model, cfg, params, prefix=False)
+    got, eng = _pressure_stress(model, cfg, params, prefix=True)
+    assert want == got
+    assert eng.sched.n_preemptions > 0       # the pressure actually fired
+    # drained: only the index still owns pages, and the partition closes
+    held_by_index = len(eng.cache.prefix.by_page)
+    assert eng.cache.allocator.n_free == eng.cache.n_pages - held_by_index
+    eng.cache.check_invariant()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry + the retire contract
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_telemetry_and_uid_counter_retire():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    (a,) = _prompts(cfg, 1)
+    eng = _engine(model, True, params)
+    _serve_rounds(eng, [[a], [a, a]])
+    tel = eng.telemetry()
+    assert tel["prefix"]["hit_rate"] > 0.5       # replays dominate lookups
+    assert tel["prefix"]["hit_tokens"] == 2 * len(a)
+    # the high-water mark survives request retirement...
+    assert tel["max_request_prefix_hit_tokens"] == len(a)
+    # ...but the per-uid tallies do not (the leak-regression contract:
+    # same lifecycle as preemptions_by_uid)
+    assert eng.sched.prefix_hit_tokens_by_uid == {}
+    assert not eng.sched.running and not eng.sched.admitting

@@ -20,11 +20,18 @@ import pytest
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.models.common import AxisRules, DEFAULT_RULES
-from repro.serve.dense_engine import DenseSlotEngine
-from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.paged_cache import PageAllocator, PagedKVCache, gather_views
-from repro.serve.router import CubeRouter
-from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve import (
+    CubeRouter,
+    DenseSlotEngine,
+    EngineConfig,
+    PageAllocator,
+    PagedKVCache,
+    Request,
+    Scheduler,
+    SchedulerConfig,
+    ServeEngine,
+)
+from repro.serve.paged_cache import gather_views
 
 RULES = AxisRules(DEFAULT_RULES)
 
@@ -66,16 +73,28 @@ def _serve(engine_cls, model, params, ecfg, reqs):
 
 def test_free_list_roundtrip():
     alloc = PageAllocator(16)
-    a = alloc.alloc(5)
-    b = alloc.alloc(11)
+    a = alloc.acquire(5)
+    b = alloc.acquire(11)
     assert alloc.n_free == 0
     assert sorted(a + b) == list(range(16))          # every page handed once
-    assert alloc.alloc(1) is None                    # dry pool: no side effect
+    assert alloc.acquire(1) is None                  # dry pool: no side effect
     assert alloc.n_free == 0
-    alloc.free(b)
-    alloc.free(a)
+    assert sorted(alloc.release(b)) == sorted(b)     # sole owner → all freed
+    alloc.release(a)
     assert alloc.n_free == 16                        # round trip → full again
-    assert sorted(alloc.alloc(16)) == list(range(16))
+    assert sorted(alloc.acquire(16)) == list(range(16))
+
+
+def test_refcount_share_release_fork():
+    alloc = PageAllocator(8)
+    (p,) = alloc.acquire(1)
+    alloc.share([p])
+    assert alloc.refcount(p) == 2
+    assert alloc.fork_for_write(p) != p              # shared → fresh copy
+    assert alloc.refcount(p) == 1                    # fork dropped one owner
+    assert alloc.fork_for_write(p) == p              # sole owner writes in place
+    assert alloc.release([p]) == [p]
+    alloc.check_invariant()
 
 
 def test_absorb_decode_inactive_lane_writes_nothing():
@@ -134,7 +153,7 @@ def test_gather_matches_dense_cache_and_logits_bitexact(served):
             return big.at[:, _slot: _slot + 1].set(small.astype(big.dtype))
 
         dense = jax.tree.map(pack, dense, pc)
-        pages = paged.alloc(len(prompt) + 1)
+        pages = paged.acquire(len(prompt) + 1)
         paged.write_prefill(pages, pc, lane=slot)
         paged.assign_lane(slot, pages)
 
@@ -251,7 +270,7 @@ def test_decode_step_paged_bitexact_vs_gather(arch):
                np.asarray([3, 1, 4], np.int32)]
     for slot, prompt in enumerate(prompts):
         _, pc = model.prefill(params, jnp.asarray(prompt)[None], RULES)
-        pages = paged.alloc(len(prompt) + 1)
+        pages = paged.acquire(len(prompt) + 1)
         paged.write_prefill(pages, pc, lane=slot)
         paged.assign_lane(slot, pages)
     bt = jnp.asarray(paged.block_tables)
@@ -393,12 +412,17 @@ def test_eos_mid_decode(served):
 
 
 class _StubCache:
+    prefix = None
+
     def __init__(self, n_pages, page_size=4):
         self.allocator = PageAllocator(n_pages)
         self.page_size = page_size
 
-    def alloc(self, n_tokens):
-        return self.allocator.alloc(-(-n_tokens // self.page_size))
+    def acquire(self, n_tokens):
+        return self.allocator.acquire(-(-n_tokens // self.page_size))
+
+    def claim_match(self, tokens, chunk):
+        return None
 
     def clear_lane(self, lane):
         pass
@@ -440,7 +464,7 @@ def test_scheduler_chunking_and_victim():
     a, b = _stub_req(1, 4), _stub_req(2, 4)
     a.out_tokens = [1, 2, 3]
     b.out_tokens = [1]
-    from repro.serve.scheduler import RequestState
+    from repro.serve import RequestState
     s.running = {
         0: RequestState(req=a, resume_tokens=np.zeros(4, np.int32), lane=0),
         1: RequestState(req=b, resume_tokens=np.zeros(4, np.int32), lane=1),
@@ -618,3 +642,57 @@ def test_serve_bench_smoke(tmp_path):
         assert a["modes"][mode]["step_latency_ms"]["p50"] > 0
     assert a["families"]["mamba2-130m"]["tokens_identical"] is True
     assert report["swap_batch"]["speedup"] > 0
+    # prefix-reuse smoke: the zipfian replays actually hit the radix index
+    # and reproduce the re-prefill tokens (both asserted inside bench_prefix
+    # as well — a dead index or a CoW break cannot pass the smoke)
+    assert report["prefix"]["tokens_identical"] is True
+    assert report["prefix"]["prefix_hit_rate"] > 0.5
+    assert report["prefix"]["prefix_vs_none_tokens_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: nested groups + flat-kwarg back-compat
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_nested_groups_and_flat_compat():
+    import dataclasses
+    import warnings
+
+    from repro.serve import AdmissionConfig, CacheConfig, ObsConfig
+    from repro.serve import engine as engine_mod
+
+    # nested construction is the real surface — no warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ecfg = EngineConfig(batch_slots=2, max_len=64,
+                            cache=CacheConfig(page_size=8),
+                            admission=AdmissionConfig(prefill_chunk=4),
+                            obs=ObsConfig(trace=True))
+    assert ecfg.cache.page_size == 8 and ecfg.admission.prefill_chunk == 4
+    # flat reads/writes pass through to the owning group
+    assert ecfg.page_size == 8 and ecfg.trace is True
+    ecfg.page_size = 4
+    assert ecfg.cache.page_size == 4
+
+    # legacy flat kwargs still construct, warning once per knob
+    engine_mod._warned_flat.clear()
+    with pytest.warns(DeprecationWarning, match="page_size"):
+        flat = EngineConfig(batch_slots=2, max_len=64, page_size=8,
+                            prefill_chunk=4, trace=True)
+    assert flat.cache.page_size == 8
+    assert flat.admission.prefill_chunk == 4
+    assert flat.obs.trace is True
+    with warnings.catch_warnings():          # ...and only once
+        warnings.simplefilter("error")
+        EngineConfig(page_size=8)
+
+    # unknown knobs still fail loudly
+    with pytest.raises(TypeError, match="mistyped_knob"):
+        EngineConfig(mistyped_knob=1)
+
+    # dataclasses.replace composes with both spellings
+    r = dataclasses.replace(flat, n_pages=12)
+    assert r.cache.n_pages == 12 and r.cache.page_size == 8
+    r2 = dataclasses.replace(flat, cache=CacheConfig(page_size=2))
+    assert r2.cache.page_size == 2

@@ -200,7 +200,7 @@ def test_image_data_labels_learnable():
 
 
 def test_serve_engine_continuous_batching():
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import EngineConfig, Request, ServeEngine
 
     cfg = get_arch("qwen2.5-3b").reduced()
     model = build_model(cfg)
@@ -221,7 +221,7 @@ def test_serve_engine_continuous_batching():
 
 def test_serve_greedy_matches_forward():
     """Engine's greedy continuation equals argmax over the full forward."""
-    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve import EngineConfig, Request, ServeEngine
 
     cfg = get_arch("qwen2.5-3b").reduced()
     model = build_model(cfg)

@@ -23,12 +23,14 @@ import pytest
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.models.common import AxisRules, DEFAULT_RULES
-from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.paged_cache import PagedKVCache
-from repro.serve.scheduler import (
+from repro.serve import (
+    EngineConfig,
+    PagedKVCache,
+    Request,
     RequestState,
     Scheduler,
     SchedulerConfig,
+    ServeEngine,
 )
 
 RULES = AxisRules(DEFAULT_RULES)
@@ -131,7 +133,7 @@ def test_swap_roundtrips_recurrent_lane_state_bitexact(arch):
     assert cache.has_state_leaves()
     prompt = np.asarray([5, 9, 2, 7, 11], np.int32)
     _, pc = model.prefill(params, jnp.asarray(prompt)[None], RULES)
-    pages = cache.alloc(len(prompt) + 1)
+    pages = cache.acquire(len(prompt) + 1)
     cache.write_prefill(pages, pc, lane=0)
     cache.assign_lane(0, pages)
     before = jax.tree.map(np.asarray, cache.pools)
@@ -141,10 +143,10 @@ def test_swap_roundtrips_recurrent_lane_state_bitexact(arch):
     # scramble the freed pages and the lane row (as a new tenant would)
     cache.pools = jax.tree.map(lambda x: x + 1.0 if x.dtype.kind == "f"
                                else x, cache.pools)
-    cache.allocator.free(pages)
+    cache.allocator.release(pages)
     cache.clear_lane(0)
 
-    new_pages = cache.allocator.alloc(len(handle.host_pages))
+    new_pages = cache.allocator.acquire(len(handle.host_pages))
     state = cache.swap_in(handle, new_pages)
     assert state is not None
     cache.assign_lane(1, new_pages)
@@ -251,7 +253,7 @@ def _running_state(plen, out_tokens, n_pages, clean=0):
     st = RequestState(req=req, resume_tokens=np.zeros(plen, np.int32),
                       pages=list(range(n_pages)), lane=0)
     if clean:
-        from repro.serve.host_tier import SwapHandle
+        from repro.serve import SwapHandle
         st.swap_handle = SwapHandle(host_pages=list(range(n_pages)),
                                     clean_pages=clean)
     return st
@@ -332,13 +334,13 @@ def test_swap_in_through_replicated_shardings():
     cache.host_shardings = host_tier_shardings(mesh, cache.pools)
     prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
     _, pc = model.prefill(params, jnp.asarray(prompt)[None], RULES)
-    pages = cache.alloc(len(prompt) + 1)
+    pages = cache.acquire(len(prompt) + 1)
     cache.write_prefill(pages, pc, lane=0)
     cache.assign_lane(0, pages)
     before = jax.tree.map(np.asarray, cache.pools)
     handle = cache.swap_out(pages, lane=0, length=len(prompt))
-    cache.allocator.free(pages)
-    new_pages = cache.allocator.alloc(len(handle.host_pages))
+    cache.allocator.release(pages)
+    new_pages = cache.allocator.acquire(len(handle.host_pages))
     cache.swap_in(handle, new_pages)
     after = jax.tree.map(np.asarray, cache.pools)
     for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
