@@ -15,7 +15,14 @@ import numpy as np
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.models.common import AxisRules, DEFAULT_RULES
-from repro.serve import CubeRouter, EngineConfig, Request, ServeEngine
+from repro.serve import (
+    AdmissionConfig,
+    CacheConfig,
+    CubeRouter,
+    EngineConfig,
+    Request,
+    ServeEngine,
+)
 
 
 def main():
@@ -35,8 +42,10 @@ def main():
     params = model.init(jax.random.key(0))
     rules = AxisRules(DEFAULT_RULES)
     ecfg = EngineConfig(
-        batch_slots=3, max_len=96, page_size=16,
-        policy=args.policy, prefill_chunk=args.prefill_chunk,
+        batch_slots=3, max_len=96,
+        cache=CacheConfig(page_size=16),
+        admission=AdmissionConfig(policy=args.policy,
+                                  prefill_chunk=args.prefill_chunk),
     )
     if args.cubes > 1:
         eng = CubeRouter(model, params, ecfg, n_cubes=args.cubes)

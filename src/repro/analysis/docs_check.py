@@ -1,0 +1,195 @@
+"""docs-check: keep the markdown docs honest against the tree.
+
+``python -m repro.analysis.docs_check [files...]`` (default: ``README.md``
++ ``docs/*.md``) verifies, without network access:
+
+* ``docs-broken-link`` — a relative markdown link whose target file does
+  not exist (http(s) links are skipped: no network in CI);
+* ``docs-missing-anchor`` — a ``#fragment`` (same-file or cross-file)
+  that matches no heading's GitHub-style slug in the target document;
+* ``docs-missing-path`` — an inline-code repo path (```` `src/...` ````,
+  ``tests/``, ``benchmarks/``, ``docs/``, ``examples/``) that does not
+  exist (globs and ``<placeholders>`` are skipped);
+* ``docs-bad-command`` — a fenced ``sh``/``bash`` command naming a repo
+  entrypoint that does not resolve: ``python -m repro.x`` must be a
+  module under ``src/``, ``python path.py`` / ``pytest path`` must name
+  existing files (leading ``VAR=value`` assignments are stripped first).
+
+Exit codes: 0 = clean, 1 = findings, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+from .findings import Finding
+
+RULES = [
+    "docs-broken-link",
+    "docs-missing-anchor",
+    "docs-missing-path",
+    "docs-bad-command",
+]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN_RE = re.compile(r"`([^`]+)`")
+_REPO_PATH_RE = re.compile(
+    r"^(?:src|tests|benchmarks|docs|examples)/[\w./\-]+$")
+_FENCE_RE = re.compile(r"^(```+|~~~+)\s*(\S*)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+_ENV_ASSIGN_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*=\S*$")
+_SHELL_LANGS = {"sh", "bash", "shell", "console"}
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, lowercase,
+    spaces to hyphens (good enough for the ascii headings we write)."""
+    text = re.sub(r"[`*_]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def _module_exists(root: Path, module: str) -> bool:
+    rel = Path("src", *module.split("."))
+    return (root / rel.with_suffix(".py")).is_file() \
+        or (root / rel / "__init__.py").is_file()
+
+
+def _check_command(line: str, root: Path) -> str | None:
+    """Error message for a shell line naming a missing repo entrypoint."""
+    toks = line.strip().lstrip("$").split()
+    while toks and _ENV_ASSIGN_RE.match(toks[0]):
+        toks.pop(0)
+    if not toks:
+        return None
+    if toks[0].startswith("python"):
+        if len(toks) >= 3 and toks[1] == "-m":
+            module = toks[2]
+            if module.startswith("repro") \
+                    and not _module_exists(root, module):
+                return f"`python -m {module}`: no such module under src/"
+        elif len(toks) >= 2 and toks[1].endswith(".py") \
+                and not toks[1].startswith("-"):
+            if not (root / toks[1]).is_file():
+                return f"`python {toks[1]}`: no such file"
+    elif toks[0] == "pytest":
+        for t in toks[1:]:
+            path = t.split("::")[0]
+            if path.startswith("-") or "/" not in path:
+                continue
+            if not (root / path).exists():
+                return f"`pytest {t}`: no such path"
+    return None
+
+
+def check_file(path: Path, root: Path) -> list[Finding]:
+    text = path.read_text()
+    display = path.resolve().relative_to(root).as_posix() \
+        if path.resolve().is_relative_to(root) else path.as_posix()
+
+    def finding(rule: str, line: int, message: str) -> Finding:
+        return Finding(rule=rule, path=display, line=line,
+                       func="<module>", message=message)
+
+    own_slugs = heading_slugs(text)
+    out: list[Finding] = []
+    in_fence, fence_shell = False, False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        fence = _FENCE_RE.match(line)
+        if fence:
+            in_fence = not in_fence
+            fence_shell = in_fence and fence.group(2) in _SHELL_LANGS
+            continue
+        if in_fence:
+            if fence_shell:
+                err = _check_command(line, root)
+                if err:
+                    out.append(finding("docs-bad-command", lineno, err))
+            continue
+
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref, _, anchor = target.partition("#")
+            if ref:
+                dest = (path.parent / ref).resolve()
+                if not dest.exists():
+                    out.append(finding(
+                        "docs-broken-link", lineno,
+                        f"link target `{ref}` does not exist"))
+                    continue
+                if anchor and dest.suffix == ".md" \
+                        and slugify(anchor) not in heading_slugs(
+                            dest.read_text()):
+                    out.append(finding(
+                        "docs-missing-anchor", lineno,
+                        f"no heading for anchor `#{anchor}` in {ref}"))
+            elif anchor and slugify(anchor) not in own_slugs:
+                out.append(finding(
+                    "docs-missing-anchor", lineno,
+                    f"no heading for anchor `#{anchor}` in this file"))
+
+        for m in _CODE_SPAN_RE.finditer(line):
+            span = m.group(1).strip()
+            if "*" in span or "<" in span or not _REPO_PATH_RE.match(span):
+                continue
+            ref = span.split("::")[0].rstrip("/").split(":")[0]
+            if not (root / ref).exists():
+                out.append(finding(
+                    "docs-missing-path", lineno,
+                    f"repo path `{span}` does not exist"))
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis.docs_check")
+    ap.add_argument("files", nargs="*", type=Path,
+                    help="markdown files (default: README.md + docs/*.md)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root for path/command checks "
+                         "(default: ancestor of this package)")
+    args = ap.parse_args(argv)
+
+    root = (args.root or Path(__file__).resolve().parents[3]).resolve()
+    files = args.files or [root / "README.md", *sorted(
+        (root / "docs").glob("*.md"))]
+    missing = [f for f in files if not f.is_file()]
+    if missing:
+        for f in missing:
+            print(f"docs-check: no such file: {f}", file=sys.stderr)
+        return 2
+
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(check_file(f, root))
+    for fnd in sorted(findings, key=lambda x: (x.path, x.line, x.rule)):
+        print(fnd.render())
+    print(f"docs-check: {len(files)} file(s), {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,9 +6,10 @@ from . import (
     pallas_trace,
     phase_transitions,
     sole_writer,
+    tune_lookup,
 )
 
 ALL_RULE_MODULES = [jax_under_lock, sole_writer, phase_transitions,
-                    pallas_trace, obs_hot_path]
+                    pallas_trace, obs_hot_path, tune_lookup]
 
 ALL_RULE_IDS = [rid for mod in ALL_RULE_MODULES for rid in mod.RULES]

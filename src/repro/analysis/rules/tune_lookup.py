@@ -1,0 +1,71 @@
+"""tune-lookup: tuned-table reads must stay at trace time, off hot paths.
+
+``repro.tune`` resolves kernel parameters by reading a JSON table
+(``tuned_entry`` / ``resolve_tuned`` / ``load_table``).  That read is safe
+exactly once per jit trace — it is file I/O plus dict probes, so it must
+never run per-event or per-grid-step:
+
+* ``tune-lookup-in-hot-path`` — a lookup call inside a function carrying
+  the ``@hot_path`` marker (``repro.obs.trace.hot_path``).  The tracer
+  hot-path contract is "a handful of scalar stores"; a table probe there
+  is allocation + I/O on the decode loop.  Resolve the parameters at
+  engine/config construction and pass them in.
+* ``tune-lookup-in-kernel`` — a lookup call inside a Pallas kernel body
+  (module-level ``*_kernel`` functions in ``repro/kernels/``).  Kernel
+  bodies re-trace per grid config and lower to device code; host-side
+  table reads there are at best a silent recompile dependency and at
+  worst a lowering error.  Look up in the Python wrapper *around*
+  ``pl.pallas_call`` (the ``@tunable`` decorator's job) and pass the
+  winners as static parameters.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import (
+    Finding,
+    SourceFile,
+    call_name,
+    decorator_tags,
+    iter_functions,
+)
+
+RULES = [
+    "tune-lookup-in-hot-path",
+    "tune-lookup-in-kernel",
+]
+
+# the repro.tune read API (keep in sync with repro/tune/table.py+registry.py)
+_LOOKUP_CALLS = {"tuned_entry", "resolve_tuned", "load_table"}
+
+
+def _lookup_calls(fn: ast.FunctionDef):
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and call_name(node) in _LOOKUP_CALLS:
+            yield node
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    findings: list[Finding] = []
+    for src in files:
+        for qual, _cls, fn in iter_functions(src.tree):
+            hot = ("hot_path", None) in decorator_tags(fn)
+            kernel = src.kind == "kernels" and fn.name.endswith("_kernel")
+            if not (hot or kernel):
+                continue
+            for node in _lookup_calls(fn):
+                if hot:
+                    findings.append(src.finding(
+                        "tune-lookup-in-hot-path", node, qual,
+                        f"tuned-table lookup `{call_name(node)}(...)` "
+                        "inside a @hot_path function — table reads are "
+                        "file I/O + dict probes, forbidden on the record "
+                        "hot path; resolve at construction time"))
+                else:
+                    findings.append(src.finding(
+                        "tune-lookup-in-kernel", node, qual,
+                        f"tuned-table lookup `{call_name(node)}(...)` "
+                        "inside a Pallas kernel body — look up in the "
+                        "wrapper around pallas_call and pass the winner "
+                        "as static config"))
+    return findings

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tiling import choose_matmul_blocks
+from repro.tune.registry import dtype_code, tunable
 from . import flash_attention as _fa
 from . import paged_attn as _pa
 from . import ssd_scan as _ssd
@@ -127,11 +128,45 @@ def stream_gd(derivs: jax.Array, coeffs: jax.Array, interpret: bool | None = Non
     return out[:m].reshape(shape)
 
 
+def _flash_pallas_shape_class(q, k, *_a) -> str:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    return (f"b{b}.sq{sq}.sk{sk}.h{h}.hkv{hkv}.d{d}"
+            f".{dtype_code(q.dtype)}")
+
+
+def _flash_pallas_cost(params, q, k, *_a):
+    """(flops, HBM bytes) vs (block_q, block_k): k/v stream through VMEM
+    once per q-block grid step, so HBM read traffic scales with
+    ceil(Sq/block_q); block_k only repartitions the inner loop (VMEM
+    resident, no HBM multiplier)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    nq = -(-sq // min(params["block_q"], sq))
+    itemsize = jnp.dtype(q.dtype).itemsize
+    flops = 4.0 * b * h * sq * sk * d
+    bytes_ = float(itemsize) * (2 * b * sq * h * d
+                                + nq * 2 * b * sk * hkv * d)
+    return flops, bytes_
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "causal", "window", "scale", "q_offset", "block_q", "block_k", "interpret",
     ),
+)
+@tunable(
+    "attn.flash_pallas",
+    space={"block_q": (64, 128, 256), "block_k": (128, 256, 512)},
+    defaults={"block_q": 128, "block_k": 128},
+    shape_class=_flash_pallas_shape_class,
+    cost_model=_flash_pallas_cost,
+    # interpret mode is not a timing proxy (kernel_bench's standing rule),
+    # so this space is only tunable where the kernel actually compiles —
+    # registered anyway: the registry is how a kernel joins for free, and
+    # off-TPU lookups fall back to the 128/128 defaults
+    backends=("tpu",),
 )
 def flash_attention(
     q: jax.Array,
@@ -141,16 +176,16 @@ def flash_attention(
     window: int | None = None,
     scale: float | None = None,
     q_offset: int = 0,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int | None = None,
+    block_k: int | None = None,
     interpret: bool | None = None,
 ):
     b, h, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     scale = float(scale) if scale is not None else float(d) ** -0.5
     dp = d + ((-d) % 128)
-    bq = min(block_q, sq + ((-sq) % 8))
-    bk = min(block_k, sk + ((-sk) % 128))
+    bq = min(block_q or 128, sq + ((-sq) % 8))
+    bk = min(block_k or 128, sk + ((-sk) % 128))
     qp = _pad_to(_pad_to(q, 2, bq), 3, dp)
     kp = _pad_to(_pad_to(k, 2, bk), 3, dp)
     vp = _pad_to(_pad_to(v, 2, bk), 3, dp)

@@ -14,10 +14,10 @@ Usage:
       --variants baseline,cache_carry
 """
 import argparse
-import json
 import sys
 
 from repro.launch.dryrun import lower_cell
+from repro.launch.searchloop import search
 
 # Named variants: (rule_overrides, cfg_overrides)
 VARIANTS = {
@@ -57,61 +57,65 @@ VARIANTS = {
 }
 
 
+def _resolve_overrides(arch: str, v: str):
+    """Expand a named variant into (rule_overrides, cfg_overrides)."""
+    ro, co = VARIANTS[v]
+    co = dict(co)
+    if v == "mb2x":
+        from repro.configs import get_arch
+
+        co["train_microbatches"] = get_arch(arch).train_microbatches * 2
+    if any(k.startswith("__ssd") for k in co):
+        import dataclasses
+        from repro.configs import get_arch
+
+        base = get_arch(arch).ssm
+        kw = {}
+        if "__ssd_factorized" in co:
+            kw["factorized"] = co.pop("__ssd_factorized")
+        if "__ssd_chunk" in co:
+            kw["chunk"] = co.pop("__ssd_chunk")
+        co["ssm"] = dataclasses.replace(base, **kw)
+    return ro, co
+
+
 def run(cell: str, variants: list[str], out_dir: str | None = None):
     arch, shape, meshname = cell.split("/")
     multi = meshname.startswith("multi")
-    rows = []
-    for v in variants:
-        ro, co = VARIANTS[v]
-        co = dict(co)
-        if v == "mb2x":
-            from repro.configs import get_arch
 
-            co["train_microbatches"] = get_arch(arch).train_microbatches * 2
-        if any(k.startswith("__ssd") for k in co):
-            import dataclasses
-            from repro.configs import get_arch
+    def measure(v: str, _payload) -> dict:
+        ro, co = _resolve_overrides(arch, v)
+        rep, compiled = lower_cell(
+            arch, shape, multi_pod=multi,
+            rule_overrides=ro or None, cfg_overrides=co or None,
+            label_suffix=f"+{v}",
+        )
+        del compiled
+        r = rep["roofline"]
+        return {
+            "mem_GB": round(rep["memory"]["per_device_GB"], 2),
+            "t_compute": float(r["t_compute_s"]),
+            "t_memory": float(r["t_memory_s"]),
+            "t_collective": float(r["t_collective_s"]),
+            "bound": r["bound"],
+            "useful": float(r["useful_flop_ratio"]),
+            "compile_s": rep["compile_s"],
+            "collectives": rep["collective_bytes"],
+        }
 
-            base = get_arch(arch).ssm
-            kw = {}
-            if "__ssd_factorized" in co:
-                kw["factorized"] = co.pop("__ssd_factorized")
-            if "__ssd_chunk" in co:
-                kw["chunk"] = co.pop("__ssd_chunk")
-            co["ssm"] = dataclasses.replace(base, **kw)
-        try:
-            rep, compiled = lower_cell(
-                arch, shape, multi_pod=multi,
-                rule_overrides=ro or None, cfg_overrides=co or None,
-                label_suffix=f"+{v}",
-            )
-            del compiled
-            r = rep["roofline"]
-            rows.append({
-                "variant": v,
-                "mem_GB": round(rep["memory"]["per_device_GB"], 2),
-                "t_compute": float(r["t_compute_s"]),
-                "t_memory": float(r["t_memory_s"]),
-                "t_collective": float(r["t_collective_s"]),
-                "bound": r["bound"],
-                "useful": float(r["useful_flop_ratio"]),
-                "compile_s": rep["compile_s"],
-                "collectives": rep["collective_bytes"],
-            })
-            print(f"[{v:16s}] mem={rows[-1]['mem_GB']:7.2f}GB "
-                  f"t=({rows[-1]['t_compute']:.3e},{rows[-1]['t_memory']:.3e},"
-                  f"{rows[-1]['t_collective']:.3e}) bound={rows[-1]['bound']} "
-                  f"useful={rows[-1]['useful']:.3f}", flush=True)
-        except Exception as e:  # noqa: BLE001
-            print(f"[{v:16s}] FAILED: {type(e).__name__}: {str(e)[:200]}",
-                  flush=True)
-            rows.append({"variant": v, "error": str(e)[:500]})
-    if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
-        tag = cell.replace("/", "__")
-        with open(os.path.join(out_dir, f"hillclimb_{tag}.json"), "w") as f:
-            json.dump(rows, f, indent=1)
-    return rows
+    def render(row: dict) -> str:
+        return (f"mem={row['mem_GB']:7.2f}GB "
+                f"t=({row['t_compute']:.3e},{row['t_memory']:.3e},"
+                f"{row['t_collective']:.3e}) bound={row['bound']} "
+                f"useful={row['useful']:.3f}")
+
+    tag = cell.replace("/", "__")
+    return search(
+        [(v, None) for v in variants], measure, render=render,
+        log=lambda s: print(s, flush=True),
+        out_path=(os.path.join(out_dir, f"hillclimb_{tag}.json")
+                  if out_dir else None),
+    )
 
 
 def main(argv=None):

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.tune.registry import dtype_code, tunable
+
 NEG_INF = -1e30
 
 
@@ -24,6 +26,35 @@ def _mask(qpos, kpos, causal: bool, window: int | None, kv_len):
     return m            # (Sq, Sk_chunk)
 
 
+def _flash_shape_class(q, k, *_a) -> str:
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    return (f"b{b}.sq{sq}.sk{sk}.h{h}.hkv{hkv}.d{d}"
+            f".{dtype_code(q.dtype)}")
+
+
+def _flash_cost(params, q, k, *_a):
+    """(flops, HBM bytes) of the chunked streaming form as a function of
+    the chunk size: the score/PV contractions are chunk-invariant, but k/v
+    stream through once per q block — shrinking the chunk multiplies the
+    k/v read traffic by ceil(Sq/chunk)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    nq = -(-sq // min(params["chunk"], sq))
+    itemsize = jnp.dtype(q.dtype).itemsize
+    flops = 4.0 * b * h * sq * sk * d
+    bytes_ = float(itemsize) * (2 * b * sq * h * d
+                                + nq * 2 * b * sk * hkv * d)
+    return flops, bytes_
+
+
+@tunable(
+    "attn.flash_xla",
+    space={"chunk": (64, 128, 256, 512, 1024)},
+    defaults={"chunk": 1024},
+    shape_class=_flash_shape_class,
+    cost_model=_flash_cost,
+)
 def flash_attention_xla(
     q: jax.Array,                  # (B, Sq, H, D)
     k: jax.Array,                  # (B, Sk, Hkv, D)
@@ -34,12 +65,16 @@ def flash_attention_xla(
     scale: float | None = None,
     q_positions: jax.Array | None = None,   # (Sq,) absolute positions
     kv_len: jax.Array | int | None = None,
-    chunk: int = 1024,
+    chunk: int | None = None,
 ) -> jax.Array:
     """Nested-chunk streaming attention (the Pallas kernel's dataflow in
     pure lax): outer map over q blocks, inner scan over kv blocks with an
     online-softmax accumulator.  The per-q-block function is checkpointed so
     training memory is O(block²) transient, not O(seq²) resident.
+
+    ``chunk=None`` resolves through the tuned table (``@tunable``, falls
+    back to 1024); model paths pass ``cfg.attn_chunk`` explicitly and are
+    untouched by tuning.
     """
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -172,6 +207,30 @@ def paged_lane_view(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     return view.reshape((b, p * ps) + pool.shape[2:])
 
 
+def _paged_shape_class(q, k_pool, v_pool, block_table, *_a) -> str:
+    b, _, h, d = q.shape
+    n_pages, ps, hkv, _ = k_pool.shape
+    p = block_table.shape[1]
+    return (f"b{b}.h{h}.hkv{hkv}.d{d}.ps{ps}.p{p}.np{n_pages}"
+            f".{dtype_code(k_pool.dtype)}")
+
+
+def _paged_validate(params, q, *_a) -> bool:
+    lb = params["lane_block"]
+    return lb == 0 or (0 < lb <= q.shape[0] and q.shape[0] % lb == 0)
+
+
+@tunable(
+    "attn.paged_decode",
+    space={"lane_block": (0, 1, 2, 4, 8)},
+    defaults={"lane_block": 0},
+    shape_class=_paged_shape_class,
+    validate=_paged_validate,
+    # no cost model: total HBM traffic is lane_block-invariant (the knob
+    # trades transient gathered-view footprint against dispatch count), so
+    # the roofline cannot separate configs — the whole 5-point space is
+    # measured
+)
 def paged_decode_attention_xla(
     q: jax.Array,             # (B, 1, H, D) one decode token per lane
     k_pool: jax.Array,        # (n_pages, PS, Hkv, D) one layer's page pool
@@ -181,11 +240,36 @@ def paged_decode_attention_xla(
     *,
     window: int | None = None,
     scale: float | None = None,
+    lane_block: int | None = None,
 ) -> jax.Array:
     """XLA paged decode attention: a transient per-layer page gather feeding
     the exact ``decode_attention`` math of the gather path (bit-exact by
     construction); the fused Pallas kernel (``kernels/paged_attn``) is the
-    no-gather TPU form of the same contraction."""
+    no-gather TPU form of the same contraction.
+
+    ``lane_block`` > 0 gathers and attends ``lane_block`` lanes at a time
+    (``lax.map`` over lane groups) — bit-exact per lane since lanes are
+    independent, but the transient gathered view shrinks from
+    (B, P·PS, ...) to (lane_block, P·PS, ...).  0 = one pass over all
+    lanes (the pre-tuner behavior); ``None`` resolves through the tuned
+    table and falls back to 0.
+    """
+    b = q.shape[0]
+    if lane_block and 0 < lane_block < b:
+        nb = b // lane_block
+        qb = q.reshape((nb, lane_block) + q.shape[1:])
+        tb = block_table.reshape(nb, lane_block, -1)
+        pb = positions.reshape(nb, lane_block)
+
+        def one(group):
+            qq, tt, pp = group
+            kc = paged_lane_view(k_pool, tt)
+            vc = paged_lane_view(v_pool, tt)
+            return decode_attention(qq, kc, vc, position=pp, window=window,
+                                    scale=scale)
+
+        out = jax.lax.map(one, (qb, tb, pb))
+        return out.reshape((b,) + out.shape[2:])
     kc = paged_lane_view(k_pool, block_table)
     vc = paged_lane_view(v_pool, block_table)
     return decode_attention(q, kc, vc, position=positions, window=window,
@@ -195,7 +279,7 @@ def paged_decode_attention_xla(
 def attend(
     q, k, v, *,
     causal=True, window=None, scale=None, q_positions=None, kv_len=None,
-    impl: str = "xla", chunk: int = 1024,
+    impl: str = "xla", chunk: int | None = None,
 ) -> jax.Array:
     """Dispatch: 'xla' (chunked scan — default, compiles everywhere),
     'pallas' (the kernels/flash_attention TPU kernel; interpret off-TPU),

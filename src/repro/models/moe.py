@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.tune.registry import dtype_code, tunable
+
 from .common import AxisRules, PSpec, activation, constrain
 
 
@@ -71,6 +73,70 @@ def aux_load_balance_loss(gates_mean: jax.Array, counts_mean: jax.Array, e: int)
     return e * jnp.sum(gates_mean * counts_mean)
 
 
+def _expert_ffn_slab(xe, w_gate, w_up, w_down, act):
+    h = jnp.einsum("gecd,edf->gecf", xe, w_gate)
+    if w_up is not None:
+        h = act(h) * jnp.einsum("gecd,edf->gecf", xe, w_up)
+    else:
+        h = act(h)
+    return jnp.einsum("gecf,efd->gecd", h, w_down)
+
+
+def _expert_shape_class(xe, w_gate, *_a) -> str:
+    g, e, c, d = xe.shape
+    f = w_gate.shape[-1]
+    return f"g{g}.e{e}.c{c}.d{d}.f{f}.{dtype_code(xe.dtype)}"
+
+
+def _expert_validate(params, xe, *_a) -> bool:
+    eb = params["expert_block"]
+    return eb == 0 or (0 < eb <= xe.shape[1] and xe.shape[1] % eb == 0)
+
+
+@tunable(
+    "moe.dispatch",
+    space={"expert_block": (0, 1, 2, 4)},
+    defaults={"expert_block": 0},
+    shape_class=_expert_shape_class,
+    validate=_expert_validate,
+    # no cost model: expert blocking doesn't change total flops/bytes (E is
+    # a batch dim of every einsum), it trades (G,E_blk,C,F) intermediate
+    # footprint against dispatch count — the 4-point space is all measured
+)
+def expert_ffn(
+    xe: jax.Array,                  # (G, E, C, D) dispatched capacity slabs
+    w_gate: jax.Array,              # (E, D, F)
+    w_up: jax.Array | None,         # (E, D, F) or None (gate-only FFN)
+    w_down: jax.Array,              # (E, F, D)
+    *,
+    act=jax.nn.gelu,
+    expert_block: int | None = None,
+) -> jax.Array:
+    """Per-expert FFN over the dispatched capacity slabs: the expert-sharded
+    contraction of ``moe_ffn``, factored out so the tuner can block it.
+
+    ``expert_block`` > 0 runs the experts in slabs of that many (static
+    Python loop + concat — bit-exact, E is a batch dimension of every
+    einsum), shrinking the transient (G, E_blk, C, F) hidden activations;
+    0 = all experts in one contraction (the pre-tuner behavior); ``None``
+    resolves through the tuned table and falls back to 0.
+    """
+    e = xe.shape[1]
+    if expert_block and 0 < expert_block < e:
+        outs = [
+            _expert_ffn_slab(
+                xe[:, i: i + expert_block],
+                w_gate[i: i + expert_block],
+                None if w_up is None else w_up[i: i + expert_block],
+                w_down[i: i + expert_block],
+                act,
+            )
+            for i in range(0, e, expert_block)
+        ]
+        return jnp.concatenate(outs, axis=1)
+    return _expert_ffn_slab(xe, w_gate, w_up, w_down, act)
+
+
 def moe_ffn(
     cfg,
     p: dict,
@@ -117,10 +183,7 @@ def moe_ffn(
     # dispatch -> (G, E, C, D), sharded: G over data, E over model (EP)
     xe = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xt)
     xe = constrain(xe, rules, "batch", "experts", None, "act_embed")
-    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
-    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
-    h = act(h) * u
-    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = expert_ffn(xe, p["w_gate"], p["w_up"], p["w_down"], act=act)
     ye = constrain(ye, rules, "batch", "experts", None, "act_embed")
     y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
     y = y.reshape(b, s, d)

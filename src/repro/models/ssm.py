@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.tune.registry import dtype_code, tunable
+
 from .common import AxisRules, PSpec, constrain, rms_norm
 
 
@@ -61,17 +63,60 @@ def _causal_conv(x, w, b, state=None):
     return jax.nn.silu(y + b), new_state
 
 
+def _ssd_shape_class(cfg, xh, bb, *_a) -> str:
+    b, sl, h, p = xh.shape
+    n = bb.shape[-1]
+    return f"b{b}.s{sl}.h{h}.p{p}.n{n}.{dtype_code(xh.dtype)}"
+
+
+def _ssd_validate(params, cfg, xh, *_a) -> bool:
+    sl = xh.shape[1]
+    q = min(params["chunk"] or cfg.ssm.chunk, sl)
+    return sl % q == 0
+
+
+def _ssd_cost(params, cfg, xh, bb, *_a):
+    """(flops, bytes) vs chunk Q: the intra-chunk dual form is quadratic
+    per chunk — scores (B,NC,Q,Q) and the y_diag contraction scale as
+    NC·Q² = S·Q, so flops grow linearly in Q; the inter-chunk state path
+    is Q-free.  Bytes add the (B,NC,Q,Q) score intermediate (S·Q floats).
+    The sequential cost of the NC-step inter-chunk scan is NOT modeled
+    (it's what the measurement pass exists to expose for tiny chunks)."""
+    b, sl, h, p = xh.shape
+    n = bb.shape[-1]
+    q = min(params["chunk"] or cfg.ssm.chunk, sl)
+    flops = 2.0 * b * sl * (q * (n + h * p) + 2.0 * n * h * p)
+    bytes_ = 4.0 * b * sl * (h * p * 2 + 2 * n + 2 * h + q)
+    return flops, bytes_
+
+
+@tunable(
+    "ssd.chunked",
+    space={"chunk": (16, 32, 64, 128, 256)},
+    # None = "use cfg.ssm.chunk", the pre-tuner behavior — the declared
+    # default must stay shape-agnostic while the real default is config
+    defaults={"chunk": None},
+    shape_class=_ssd_shape_class,
+    cost_model=_ssd_cost,
+    validate=_ssd_validate,
+)
 def ssd_chunked(
-    cfg, xh, bb, cc, dt, a_log, d_skip, init_state=None,
+    cfg, xh, bb, cc, dt, a_log, d_skip, init_state=None, *,
+    chunk: int | None = None,
 ):
     """SSD forward.  xh: (B,S,H,P); bb/cc: (B,S,N); dt: (B,S,H).
 
     Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    ``chunk`` overrides the sequence-tile size ``cfg.ssm.chunk`` (the
+    paper's T_Ci); ``None`` resolves through the tuned table and falls
+    back to the config value — model paths with untuned shapes are
+    bit-identical to the pre-tuner form.
     """
     s = cfg.ssm
     b, sl, h, p = xh.shape
     n = s.d_state
-    q = min(s.chunk, sl)
+    q = min(chunk or s.chunk, sl)
     assert sl % q == 0, (sl, q)
     nc = sl // q
 

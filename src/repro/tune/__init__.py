@@ -1,0 +1,32 @@
+"""repro.tune — cutout autotuner for the repo's kernels.
+
+A *cutout* is one kernel invocation extracted with its real shapes/dtypes
+(`jax.ShapeDtypeStruct`s, no data).  The tuner enumerates a per-kernel
+config space (block/tile sizes, grid shapes, scalar-prefetch on/off),
+prunes configs whose analytic roofline bound (``core.roofline.V5E``)
+cannot approach the best bound in the space, measures the survivors in
+fresh timing loops (``launch.searchloop`` — the same loop `hillclimb`
+drives), and caches the winner in ``TUNED_kernels.json`` keyed by
+``kernel|shape_class|backend``.
+
+Kernels participate through the ``@tunable`` registry decorator: a
+tunable parameter passed as ``None`` is resolved at trace time from the
+committed table (shape classes are pure functions of ``.shape``/``.dtype``,
+static under tracing), falling back to the kernel's declared default when
+no entry matches — so untuned shapes behave exactly as before and any new
+kernel joins the tuner for free.
+
+Workflow docs: ``docs/kernels.md``.  Regenerate the table with
+``python -m repro.tune --update``.
+"""
+from .registry import (               # noqa: F401
+    REGISTRY,
+    Cutout,
+    capture,
+    materialize,
+    no_tuning,
+    resolve_tuned,
+    tunable,
+)
+from .table import TABLE_PATH, load_table, save_table, tuned_entry  # noqa: F401
+from .tuner import enumerate_space, prune_configs, tune_kernel      # noqa: F401

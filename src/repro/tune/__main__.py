@@ -1,0 +1,127 @@
+"""CLI for the cutout autotuner.
+
+    python -m repro.tune --update              # retune every canonical
+                                               # cutout, rewrite the table
+    python -m repro.tune --update --kernel ssd.chunked
+    python -m repro.tune --smoke               # CI: tune one tiny shape
+                                               # class fresh, assert the
+                                               # winner beats the default
+    python -m repro.tune --list                # registry + table contents
+
+``--update`` merges per-kernel entries into ``TUNED_kernels.json`` (other
+kernels' entries survive — like ``bench_gate --update --only``); kernels
+whose config space is not meaningful on this backend (e.g. the Pallas
+flash kernel off-TPU) are skipped and keep any committed entries for
+their own backends.
+"""
+from __future__ import annotations
+
+import argparse
+import platform
+import sys
+
+import jax
+
+from . import cutouts, registry, table, tuner
+
+
+def _log(s: str) -> None:
+    print(s, flush=True)
+
+
+def _tune_spec(name: str, *, smoke: bool, iters: int, slack: float):
+    """(shape_class, entry) for one canonical cutout on this backend."""
+    kern = registry.REGISTRY[name]
+    args = cutouts.build(name, smoke=smoke)
+    sc = kern.shape_class(*args)
+    _log(f"== {name} [{sc}] space={kern.space}")
+    entry = tuner.tune_kernel(name, args, iters=iters, slack=slack, log=_log)
+    _log(f"   winner {entry['params']} "
+         f"{entry['winner_us']}us vs default {entry['default_us']}us "
+         f"(ratio {entry['ratio']}, pruned {entry['pruned']}/"
+         f"{entry['space_size']})")
+    return sc, entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--update", action="store_true",
+                      help="retune the canonical cutouts and merge the "
+                           "winners into TUNED_kernels.json")
+    mode.add_argument("--smoke", action="store_true",
+                      help="tune the tiny smoke shape classes fresh "
+                           "(nothing written); fail unless each winner "
+                           "beats (<=) its default")
+    mode.add_argument("--list", action="store_true",
+                      help="print the kernel registry and table entries")
+    ap.add_argument("--kernel", action="append", default=None,
+                    help="restrict --update/--smoke to these kernels")
+    ap.add_argument("--iters", type=int, default=20,
+                    help="timing iterations per surviving config")
+    ap.add_argument("--slack", type=float, default=tuner.DEFAULT_SLACK,
+                    help="roofline prune slack (bound <= slack * best)")
+    args = ap.parse_args(argv)
+
+    backend = jax.default_backend()
+    names = args.kernel or sorted(cutouts.CUTOUTS)
+    for n in names:
+        if n not in cutouts.CUTOUTS:
+            ap.error(f"unknown kernel {n!r}; known: {sorted(cutouts.CUTOUTS)}")
+
+    if args.list:
+        tab = table.load_table()
+        for name, kern in sorted(registry.REGISTRY.items()):
+            print(f"{name}: space={kern.space} defaults={kern.defaults} "
+                  f"backends={kern.backends}")
+        for key, entry in sorted(tab["entries"].items()):
+            print(f"  {key}: {entry['params']} (ratio {entry['ratio']})")
+        return 0
+
+    if args.smoke:
+        failures = []
+        smokable = [n for n in names if cutouts.CUTOUTS[n].smoke is not None]
+        if not smokable:
+            _log("no smoke cutouts among " + ", ".join(names))
+            return 1
+        for name in smokable:
+            kern = registry.REGISTRY[name]
+            if backend not in kern.backends:
+                _log(f"-- {name}: space not meaningful on {backend}, skipped")
+                continue
+            _, entry = _tune_spec(name, smoke=True, iters=args.iters,
+                                  slack=args.slack)
+            if entry["winner_us"] > entry["default_us"]:
+                failures.append(f"{name}: winner {entry['winner_us']}us "
+                                f"slower than default {entry['default_us']}us")
+        if failures:
+            _log("tuner smoke FAILED:")
+            for f in failures:
+                _log(f"  - {f}")
+            return 1
+        _log("tuner smoke ok")
+        return 0
+
+    # --update
+    tab = table.load_table()
+    for name in names:
+        kern = registry.REGISTRY[name]
+        if backend not in kern.backends:
+            _log(f"-- {name}: space not meaningful on {backend} "
+                 f"(backends={kern.backends}), entry unchanged")
+            continue
+        sc, entry = _tune_spec(name, smoke=False, iters=args.iters,
+                               slack=args.slack)
+        tab["entries"][table.entry_key(name, sc, backend)] = entry
+    tab["env"] = {"jax": jax.__version__,
+                  "python": platform.python_version(),
+                  "machine": platform.machine(),
+                  "backend": backend}
+    table.save_table(tab)
+    _log(f"table written: {table.TABLE_PATH.name} "
+         f"({len(tab['entries'])} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

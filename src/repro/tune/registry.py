@@ -1,0 +1,175 @@
+"""Kernel registry: the ``@tunable`` decorator and trace-time lookup.
+
+A tunable kernel declares its config space (param → choices), the default
+config its callers get today, a *shape-class* function (a pure function of
+the call's shapes/dtypes producing the table key — ``.shape``/``.dtype``
+are static under jax tracing, so the lookup is trace-safe by construction),
+and optionally an analytic cost model for the roofline prune plus a
+validity predicate for (shape, config) combinations.
+
+The wrapper resolves any tunable parameter the caller passed as ``None``:
+committed-table winner when the (kernel, shape-class, backend) entry
+exists, declared default otherwise.  Callers that pass explicit values
+(every model/serve path in this repo passes ``chunk=cfg.attn_chunk`` etc.)
+never consult the table, so tuning cannot perturb a path that didn't opt
+in.  ``no_tuning()`` force-disables lookups for a block (tests, and the
+tuner's own default-leg measurements).
+
+``capture()`` records cutouts — (kernel, shape_class, arg structs) — from
+real invocations flowing through the wrappers, which is how a new workload
+donates its shapes to ``python -m repro.tune --update``.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from collections.abc import Callable
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from .table import tuned_entry
+
+REGISTRY: dict[str, TunableKernel] = {}
+
+_state = threading.local()
+
+# short dtype codes for shape-class keys (see docs/kernels.md)
+_DT_CODES = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+             "float64": "f64", "int32": "i32", "int8": "i8", "bool": "b1"}
+
+
+def dtype_code(dtype) -> str:
+    name = np.dtype(dtype).name
+    return _DT_CODES.get(name, name)
+
+
+@dataclass(frozen=True)
+class TunableKernel:
+    name: str
+    fn: Callable
+    space: dict[str, tuple]            # param -> candidate values
+    defaults: dict[str, Any]           # param -> the pre-tuner behavior
+    shape_class: Callable[..., str]    # (*call args) -> table key segment
+    cost_model: Callable | None        # (params, *args) -> (flops, bytes)
+    validate: Callable | None          # (params, *args) -> bool
+    backends: tuple[str, ...]          # backends the space is meaningful on
+
+
+@dataclass(frozen=True)
+class Cutout:
+    """One extracted kernel invocation: real shapes/dtypes, no data."""
+
+    kernel: str
+    shape_class: str
+    args: tuple = field(default=())    # ShapeDtypeStruct per array arg,
+                                       # non-array args carried verbatim
+
+
+def _struct(x: Any) -> Any:
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
+    return x
+
+
+def materialize(cutout: Cutout, seed: int = 0) -> tuple:
+    """Concrete random inputs for a captured cutout.  Float structs draw
+    from N(0,1); integer structs draw small non-negative values (safe for
+    index-like operands — the kernels clip/mask out-of-range indices)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for a in cutout.args:
+        if isinstance(a, jax.ShapeDtypeStruct):
+            if np.issubdtype(a.dtype, np.integer):
+                out.append(jax.numpy.asarray(
+                    rng.integers(0, 4, size=a.shape), a.dtype))
+            else:
+                out.append(jax.numpy.asarray(
+                    rng.normal(size=a.shape), a.dtype))
+        else:
+            out.append(a)
+    return tuple(out)
+
+
+@contextlib.contextmanager
+def no_tuning():
+    """Disable table lookups for the block: every ``None`` tunable param
+    resolves to its declared default."""
+    prev = getattr(_state, "disabled", False)
+    _state.disabled = True
+    try:
+        yield
+    finally:
+        _state.disabled = prev
+
+
+@contextlib.contextmanager
+def capture():
+    """Record the cutout of every tunable-kernel invocation in the block
+    (trace-time: one record per jit trace, not per execution)."""
+    prev = getattr(_state, "captured", None)
+    _state.captured = []
+    try:
+        yield _state.captured
+    finally:
+        _state.captured = prev
+
+
+def resolve_tuned(name: str, *args) -> dict[str, Any]:
+    """Trace-time parameter resolution for kernel ``name`` called with
+    ``args``: table winner when present, declared defaults otherwise."""
+    kern = REGISTRY[name]
+    params = dict(kern.defaults)
+    if getattr(_state, "disabled", False):
+        return params
+    sc = kern.shape_class(*args)
+    captured = getattr(_state, "captured", None)
+    if captured is not None:
+        captured.append(Cutout(name, sc, tuple(_struct(a) for a in args)))
+    backend = jax.default_backend()
+    if backend not in kern.backends:
+        return params
+    entry = tuned_entry(name, sc, backend)
+    if entry is not None:
+        params.update(entry["params"])
+    return params
+
+
+def tunable(
+    name: str,
+    *,
+    space: dict[str, tuple],
+    defaults: dict[str, Any],
+    shape_class: Callable[..., str],
+    cost_model: Callable | None = None,
+    validate: Callable | None = None,
+    backends: tuple[str, ...] = ("cpu", "gpu", "tpu"),
+):
+    """Register ``fn`` as a tunable kernel.  Every key of ``space`` must be
+    a keyword parameter of ``fn`` whose ``None`` means "resolve me"."""
+
+    def deco(fn: Callable) -> Callable:
+        kern = TunableKernel(
+            name=name, fn=fn, space=dict(space), defaults=dict(defaults),
+            shape_class=shape_class, cost_model=cost_model,
+            validate=validate, backends=tuple(backends),
+        )
+        assert set(kern.defaults) == set(kern.space), name
+        REGISTRY[name] = kern
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if any(kwargs.get(p) is None for p in kern.space):
+                resolved = resolve_tuned(name, *args)
+                for p in kern.space:
+                    if kwargs.get(p) is None:
+                        kwargs[p] = resolved[p]
+            return fn(*args, **kwargs)
+
+        wrapper.__tunable__ = kern
+        return wrapper
+
+    return deco

@@ -1,0 +1,84 @@
+"""Tuned-parameter table: the JSON cache of cutout-search winners.
+
+Ships in-repo as ``TUNED_kernels.json`` next to the ``BENCH_*.json``
+baselines (the tuning trajectory lives in git, like the bench trajectory).
+Entries are keyed ``kernel|shape_class|backend`` where ``shape_class`` is
+the kernel's own pure function of its arguments' shapes/dtypes — the key a
+call site recomputes at trace time must match the key ``--update`` wrote
+byte-for-byte, across processes and machines (tests pin this).
+
+Entry schema (``version`` 1)::
+
+    {"params":     {<tunable param>: <winner value>, ...},
+     "default_us": <median us of the declared defaults>,
+     "winner_us":  <median us of the winner>,
+     "ratio":      winner_us / default_us,       # <= 1.0 by construction
+     "space_size": <configs enumerated>, "pruned": <killed by roofline>,
+     "measured":   <configs timed>}
+
+Reads are cached module-globally (one file read per process, at trace
+time — never on a hot path; repro-lint's ``tune-lookup-in-hot-path`` rule
+enforces the *never* half).  ``REPRO_TUNED_TABLE`` points lookups at an
+alternate table (tests use this); ``reload_table()`` drops the cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any
+
+TABLE_VERSION = 1
+TABLE_PATH = pathlib.Path(__file__).resolve().parents[3] / "TUNED_kernels.json"
+
+_cache: dict[str, Any] | None = None
+_cache_path: str | None = None
+
+
+def _active_path() -> pathlib.Path:
+    override = os.environ.get("REPRO_TUNED_TABLE")
+    return pathlib.Path(override) if override else TABLE_PATH
+
+
+def entry_key(kernel: str, shape_class: str, backend: str) -> str:
+    return f"{kernel}|{shape_class}|{backend}"
+
+
+def load_table(path: pathlib.Path | None = None) -> dict[str, Any]:
+    """Parse a tuned table; missing file → empty table (everything falls
+    back to defaults, the correct cold-start behavior)."""
+    p = path or _active_path()
+    if not p.exists():
+        return {"version": TABLE_VERSION, "env": {}, "entries": {}}
+    data = json.loads(p.read_text())
+    if data.get("version") != TABLE_VERSION:
+        raise ValueError(
+            f"tuned table {p} has version {data.get('version')!r}, "
+            f"expected {TABLE_VERSION} — regenerate with "
+            "`python -m repro.tune --update`"
+        )
+    return data
+
+
+def save_table(table: dict[str, Any], path: pathlib.Path | None = None) -> None:
+    p = path or _active_path()
+    p.write_text(json.dumps(table, indent=2, sort_keys=True) + "\n")
+    reload_table()
+
+
+def reload_table() -> None:
+    """Drop the process-level cache (tests swap tables via
+    ``REPRO_TUNED_TABLE`` mid-process)."""
+    global _cache, _cache_path
+    _cache, _cache_path = None, None
+
+
+def tuned_entry(kernel: str, shape_class: str, backend: str) -> dict | None:
+    """The cached winner for (kernel, shape_class, backend), or ``None``
+    when this shape class was never tuned (caller falls back to defaults)."""
+    global _cache, _cache_path
+    p = str(_active_path())
+    if _cache is None or _cache_path != p:
+        _cache = load_table()
+        _cache_path = p
+    return _cache["entries"].get(entry_key(kernel, shape_class, backend))

@@ -1,0 +1,11 @@
+"""Negative fixture: a tuned-table lookup inside a Pallas kernel body —
+the lookup belongs in the Python wrapper around ``pallas_call``."""
+
+
+def tuned_entry(kernel, shape_class, backend):
+    return None
+
+
+def _tuned_bad_kernel(x_ref, o_ref, *, blk):
+    entry = tuned_entry("ssd.chunked", "b1.s64", "tpu")   # BAD: host I/O
+    o_ref[...] = x_ref[...] * entry["params"]["chunk"]

@@ -1,0 +1,20 @@
+"""Positive fixture: the sanctioned tuning idiom — the table lookup runs
+in the Python wrapper (trace time, once per jit trace); the kernel body
+receives the winner as static kw-only config."""
+import functools
+
+from jax.experimental import pallas as pl
+
+
+def resolve_tuned(name, *args):
+    return {"block": 128}
+
+
+def _tuned_good_kernel(x_ref, o_ref, *, block):
+    o_ref[...] = x_ref[...] * block         # static config — fine
+
+
+def run_tuned(x):
+    params = resolve_tuned("demo.kernel", x)    # wrapper-level lookup — fine
+    kern = functools.partial(_tuned_good_kernel, block=params["block"])
+    return pl.pallas_call(kern, out_shape=None)(x)

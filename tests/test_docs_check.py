@@ -1,0 +1,83 @@
+"""docs-check tests: the shipped docs must pass, and each finding class
+must fire on a crafted bad document."""
+from pathlib import Path
+
+from repro.analysis import docs_check
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_slugify_matches_github_style():
+    assert docs_check.slugify("Kernel authoring and tuning") == \
+        "kernel-authoring-and-tuning"
+    assert docs_check.slugify("Serving (`repro.serve`)") == \
+        "serving-reproserve"
+    assert docs_check.slugify("CI (`.github/workflows/ci.yml`)") == \
+        "ci-githubworkflowsciyml"
+
+
+def test_heading_slugs_dedupe_and_skip_fences():
+    text = "# A\n# A\n```\n# not a heading\n```\n## B c\n"
+    assert docs_check.heading_slugs(text) == {"a", "a-1", "b-c"}
+
+
+def test_shipped_docs_are_clean():
+    files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    assert len(files) >= 3          # README + architecture + kernels
+    findings = []
+    for f in files:
+        findings.extend(docs_check.check_file(f, REPO))
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_bad_doc_fires_every_rule(tmp_path):
+    target = tmp_path / "exists.md"
+    target.write_text("# Real heading\n")
+    bad = tmp_path / "bad.md"
+    bad.write_text(
+        "# Title\n"
+        "[gone](missing.md)\n"
+        "[bad anchor](exists.md#no-such-heading)\n"
+        "[self](#also-missing)\n"
+        "see `src/repro/does_not_exist.py`\n"
+        "```sh\n"
+        "PYTHONPATH=src python -m repro.no_such_module --flag\n"
+        "python benchmarks/nope.py\n"
+        "pytest tests/missing_test.py\n"
+        "```\n"
+    )
+    findings = docs_check.check_file(bad, tmp_path)
+    fired = {f.rule for f in findings}
+    assert fired == set(docs_check.RULES)
+    # the self-anchor and cross-file anchor are distinct findings
+    anchors = [f for f in findings if f.rule == "docs-missing-anchor"]
+    assert len(anchors) == 2
+    # all three bad commands fire, but only because they name repo
+    # entrypoints — the env-var prefix was stripped first
+    cmds = [f for f in findings if f.rule == "docs-bad-command"]
+    assert len(cmds) == 3
+
+
+def test_good_doc_is_clean(tmp_path):
+    other = tmp_path / "other.md"
+    other.write_text("# Target Section\n")
+    good = tmp_path / "good.md"
+    good.write_text(
+        "# One\n"
+        "## Two words\n"
+        "[ok](#two-words) [x](other.md#target-section)\n"
+        "[http is skipped](https://example.com/404)\n"
+        "`src/repro/tune/table.py` and `docs/kernels.md` exist; "
+        "`src/repro/*.py` globs and `src/<name>.py` placeholders skip.\n"
+        "```sh\n"
+        "PYTHONPATH=src python -m repro.tune --smoke\n"
+        "PYTHONPATH=src python -m pytest -x -q   # non-repro module: skipped\n"
+        "python benchmarks/kernel_bench.py\n"
+        "pytest tests/test_tune.py -q\n"
+        "```\n"
+        "```python\n"
+        "import repro.not_checked_in_python_fences\n"
+        "```\n"
+    )
+    findings = docs_check.check_file(good, REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)

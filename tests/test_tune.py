@@ -1,0 +1,262 @@
+"""Cutout autotuner tests: table roundtrip + cross-process key stability,
+roofline-prune correctness, fallback-to-default, capture, the committed
+table's schema, and a tiny end-to-end tune."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.tune import (
+    REGISTRY,
+    capture,
+    enumerate_space,
+    load_table,
+    materialize,
+    no_tuning,
+    prune_configs,
+    resolve_tuned,
+    save_table,
+    tune_kernel,
+    tuned_entry,
+)
+from repro.tune import cutouts, table
+from repro.tune.registry import TunableKernel
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture
+def tmp_table(tmp_path, monkeypatch):
+    """Point lookups at a fresh table file under tmp_path."""
+    p = tmp_path / "tuned.json"
+    monkeypatch.setenv("REPRO_TUNED_TABLE", str(p))
+    table.reload_table()
+    yield p
+    table.reload_table()
+
+
+def _entry(params):
+    return {"params": params, "default_us": 100.0, "winner_us": 70.0,
+            "ratio": 0.7, "space_size": 5, "pruned": 0, "measured": 5}
+
+
+# ---------------------------------------------------------------- table
+
+def test_enumerate_space_stable_order():
+    space = {"b": (1, 2), "a": (10, 20)}
+    got = enumerate_space(space)
+    assert got == [{"a": 10, "b": 1}, {"a": 10, "b": 2},
+                   {"a": 20, "b": 1}, {"a": 20, "b": 2}]
+
+
+def test_table_roundtrip(tmp_table):
+    tab = load_table()
+    assert tab == {"version": table.TABLE_VERSION, "env": {}, "entries": {}}
+    key = table.entry_key("ssd.chunked", "b1.s64.h2.p16.n16.f32", "cpu")
+    tab["entries"][key] = _entry({"chunk": 32})
+    save_table(tab)
+    assert load_table() == tab
+    assert tuned_entry("ssd.chunked", "b1.s64.h2.p16.n16.f32",
+                       "cpu")["params"] == {"chunk": 32}
+    assert tuned_entry("ssd.chunked", "b9.s64.h2.p16.n16.f32", "cpu") is None
+
+
+def test_table_version_mismatch_raises(tmp_table):
+    tmp_table.write_text(json.dumps({"version": 99, "entries": {}}))
+    with pytest.raises(ValueError, match="version"):
+        load_table()
+
+
+def test_shape_class_stable_across_processes():
+    """The key a call site recomputes must match the key --update wrote,
+    byte-for-byte, in a different process."""
+    args = cutouts.build("ssd.chunked", smoke=True)
+    here = REGISTRY["ssd.chunked"].shape_class(*args)
+    code = (
+        "from repro.tune import cutouts, registry\n"
+        "a = cutouts.build('ssd.chunked', smoke=True)\n"
+        "print(registry.REGISTRY['ssd.chunked'].shape_class(*a), end='')\n"
+    )
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        check=True, cwd=REPO, env=env,
+    )
+    assert out.stdout == here
+
+
+# ---------------------------------------------------------------- prune
+
+@pytest.fixture
+def fake_kernel():
+    """A registered kernel whose cost model makes k=3 provably hopeless."""
+    measured = []
+
+    def fn(x, *, k):
+        measured.append(k)           # trace-time record per measured config
+        return x * k
+
+    def cost(params, x):
+        n = float(x.size)
+        if params["k"] == 3:
+            return 1e18, 1e18        # bound >> slack * best: must be pruned
+        return 2 * n, 4 * n
+
+    kern = TunableKernel(
+        name="test.fake", fn=fn, space={"k": (1, 2, 3)}, defaults={"k": 1},
+        shape_class=lambda x: f"n{x.size}", cost_model=cost, validate=None,
+        backends=("cpu", "gpu", "tpu"),
+    )
+    REGISTRY["test.fake"] = kern
+    yield kern, measured
+    del REGISTRY["test.fake"]
+
+
+def test_prune_drops_over_bound_config(fake_kernel):
+    kern, _ = fake_kernel
+    x = jnp.ones((8,), jnp.float32)
+    kept, pruned = prune_configs(kern, enumerate_space(kern.space), (x,))
+    assert {c["k"] for c in kept} == {1, 2}
+    assert pruned == 1
+
+
+def test_prune_keeps_default_even_when_over_bound(fake_kernel):
+    kern, _ = fake_kernel
+    bad_default = TunableKernel(**{**kern.__dict__, "defaults": {"k": 3}})
+    x = jnp.ones((8,), jnp.float32)
+    kept, pruned = prune_configs(bad_default,
+                                 enumerate_space(kern.space), (x,))
+    assert {c["k"] for c in kept} == {1, 2, 3}
+    assert pruned == 0
+
+
+def test_over_bound_config_is_never_measured(fake_kernel):
+    kern, measured = fake_kernel
+    x = jnp.ones((8,), jnp.float32)
+    entry = tune_kernel("test.fake", (x,), iters=1)
+    assert 3 not in measured
+    assert entry["pruned"] == 1
+    assert entry["space_size"] == 3
+    assert entry["measured"] == 2
+    assert entry["winner_us"] <= entry["default_us"]
+    assert entry["params"]["k"] in (1, 2)
+
+
+def test_validate_filters_before_prune():
+    kern = TunableKernel(
+        name="test.valid", fn=lambda x, *, k: x, space={"k": (1, 2, 3)},
+        defaults={"k": 1}, shape_class=lambda x: "s",
+        cost_model=None, validate=lambda p, x: p["k"] != 2,
+        backends=("cpu",),
+    )
+    kept, pruned = prune_configs(kern, enumerate_space(kern.space), (None,))
+    assert {c["k"] for c in kept} == {1, 3}
+    assert pruned == 0                   # invalid != pruned-by-roofline
+
+
+# ------------------------------------------------------------- resolve
+
+def test_fallback_to_default_when_entry_missing(tmp_table):
+    """No table entry → the declared defaults, and the kernel output is
+    bitwise identical to passing the default explicitly."""
+    from repro.models.attention import flash_attention_xla
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.float32)
+    assert resolve_tuned("attn.flash_xla", q, q, q) == {"chunk": 1024}
+    tuned = flash_attention_xla(q, q, q, chunk=None)
+    explicit = flash_attention_xla(q, q, q, chunk=1024)
+    np.testing.assert_array_equal(np.asarray(tuned), np.asarray(explicit))
+
+
+def test_table_entry_resolves_and_no_tuning_disables(tmp_table):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.float32)
+    kern = REGISTRY["attn.flash_xla"]
+    sc = kern.shape_class(q, q, q)
+    tab = load_table()
+    tab["entries"][table.entry_key(
+        "attn.flash_xla", sc, jax.default_backend())] = _entry({"chunk": 64})
+    save_table(tab)
+    assert resolve_tuned("attn.flash_xla", q, q, q) == {"chunk": 64}
+    with no_tuning():
+        assert resolve_tuned("attn.flash_xla", q, q, q) == {"chunk": 1024}
+
+
+def test_capture_records_cutouts(tmp_table):
+    from repro.models.attention import flash_attention_xla
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.float32)
+    with capture() as caps:
+        flash_attention_xla(q, q, q, chunk=None)
+    assert [c.kernel for c in caps] == ["attn.flash_xla"]
+    cut = caps[0]
+    assert cut.shape_class == REGISTRY["attn.flash_xla"].shape_class(q, q, q)
+    args = materialize(cut)
+    assert [a.shape for a in args] == [(1, 32, 2, 8)] * 3
+    assert all(a.dtype == jnp.float32 for a in args)
+
+
+def test_explicit_value_never_consults_table(tmp_table, monkeypatch):
+    """Callers passing real values must not trigger a lookup at all."""
+    from repro.models.attention import flash_attention_xla
+
+    def boom(*a, **k):
+        raise AssertionError("table consulted for an explicit value")
+
+    monkeypatch.setattr("repro.tune.registry.tuned_entry", boom)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.float32)
+    flash_attention_xla(q, q, q, chunk=64)
+
+
+# ------------------------------------------------- committed table meta
+
+def test_committed_table_matches_registry_schema():
+    """Every committed entry must match its kernel's CURRENT config-space
+    schema — a space change without a retune fails here."""
+    tab = load_table(table.TABLE_PATH)
+    assert tab["entries"], "TUNED_kernels.json missing or empty"
+    for key, entry in tab["entries"].items():
+        kernel, sc, backend = key.split("|")
+        assert kernel in REGISTRY, f"{key}: unknown kernel"
+        kern = REGISTRY[kernel]
+        assert backend in kern.backends, f"{key}: backend not declared"
+        assert set(entry["params"]) <= set(kern.space), key
+        for p, v in entry["params"].items():
+            assert v in kern.space[p] or v == kern.defaults[p], \
+                f"{key}: {p}={v!r} not in space {kern.space[p]}"
+        for field in ("default_us", "winner_us", "ratio",
+                      "space_size", "pruned", "measured"):
+            assert field in entry, f"{key}: missing {field}"
+        assert entry["ratio"] <= 1.0, f"{key}: winner slower than default"
+        if kernel in cutouts.CUTOUTS:
+            args = cutouts.build(kernel)
+            assert sc == kern.shape_class(*args), \
+                f"{key}: shape class drifted from the canonical cutout"
+
+
+def test_registry_covers_all_cutouts():
+    assert set(cutouts.CUTOUTS) <= set(REGISTRY)
+    for kern in REGISTRY.values():
+        assert set(kern.defaults) == set(kern.space)
+
+
+# ------------------------------------------------------------ end2end
+
+def test_tune_kernel_smoke_end_to_end(tmp_table):
+    """Tune the tiny SSD cutout fresh: the winner must beat (<=) the
+    default by construction, and the entry must be schema-complete."""
+    args = cutouts.build("ssd.chunked", smoke=True)
+    entry = tune_kernel("ssd.chunked", args, iters=2)
+    assert entry["winner_us"] <= entry["default_us"]
+    assert entry["ratio"] <= 1.0
+    assert entry["measured"] >= 1
+    assert set(entry["params"]) == {"chunk"}
