@@ -7,12 +7,16 @@ exercised deterministically in tests (and in chaos runs on real slices).
 ``StragglerDetector`` keeps per-host step-report timestamps and flags hosts
 whose average step time exceeds ``factor ×`` the median across hosts
 (stragglers) or that have fallen more than ``timeout`` seconds behind the
-freshest report (dead).  Clocks are injectable for tests.
+freshest report (dead).  Timestamps default to the injectable
+``repro.obs.clock`` monotonic source (swap in a ``ManualClock`` via
+``obs.clock.set_source`` and chaos tests become deterministic); a custom
+``clock`` callable or an explicit ``now=`` still override per call.
 """
 from __future__ import annotations
 
-import time
-from collections.abc import Iterable
+from collections.abc import Callable, Iterable
+
+from repro.obs import clock as obs_clock
 
 
 class FaultInjector:
@@ -35,19 +39,32 @@ class FaultInjector:
 class StragglerDetector:
     """Flags slow and dead hosts from per-step progress reports."""
 
-    def __init__(self, n_hosts: int, factor: float = 1.5, timeout: float = 600.0):
+    def __init__(self, n_hosts: int, factor: float = 1.5, timeout: float = 600.0,
+                 clock: Callable[[], float] | None = None):
         self.n_hosts = n_hosts
         self.factor = factor
         self.timeout = timeout
+        # default reads obs.clock.monotonic AT CALL TIME so a ManualClock
+        # installed via obs.clock.set_source takes effect without rebuilding
+        # the detector (time.time() here was the one wall-clock holdout in
+        # the stack — it made chaos timelines nondeterministic)
+        self._clock = obs_clock.monotonic if clock is None else clock
         self._first: dict[int, float] = {}
         self._last: dict[int, float] = {}
         self._count: dict[int, int] = {}
 
     def report(self, host: int, step: int, now: float | None = None) -> None:
-        now = time.time() if now is None else now
+        now = self._clock() if now is None else now
         self._first.setdefault(host, now)
         self._last[host] = now
         self._count[host] = self._count.get(host, 0) + 1
+
+    def forget(self, host: int) -> None:
+        """Drop a host's report history — called after the router retires a
+        dead cube so it stops dominating the dead/straggler queries."""
+        self._first.pop(host, None)
+        self._last.pop(host, None)
+        self._count.pop(host, None)
 
     # -- queries ------------------------------------------------------------
 

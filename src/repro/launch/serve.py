@@ -19,6 +19,7 @@ from repro.models import build_model
 from repro.serve import (
     AdmissionConfig,
     CacheConfig,
+    CubeProcRouter,
     CubeRouter,
     EngineConfig,
     ObsConfig,
@@ -69,6 +70,14 @@ def main(argv=None):
     ap.add_argument("--route",
                     choices=["hash", "least_loaded", "prefix_affinity"],
                     default="least_loaded")
+    ap.add_argument("--multiproc", action="store_true",
+                    help="with --cubes N: one worker PROCESS per cube "
+                         "(serve.cube_proc.CubeProcRouter) with live "
+                         "straggler/dead-cube fault policy, instead of "
+                         "in-process engine replicas")
+    ap.add_argument("--checkpoint-every", type=int, default=4,
+                    help="multiproc: steps between shadow checkpoints "
+                         "forwarded to the backup cube (0 = off)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record request lifecycles + engine events into "
                          "the ring-buffer tracer and write a Perfetto/"
@@ -99,7 +108,11 @@ def main(argv=None):
         obs=ObsConfig(trace=args.trace is not None),
     )
     with set_mesh(mesh):
-        if args.cubes > 1:
+        if args.cubes > 1 and args.multiproc:
+            eng = CubeProcRouter(args.arch, ecfg, n_cubes=args.cubes,
+                                 policy=args.route,
+                                 checkpoint_every=args.checkpoint_every)
+        elif args.cubes > 1:
             eng = CubeRouter(model, params, ecfg, n_cubes=args.cubes,
                              policy=args.route)
         else:
@@ -119,9 +132,14 @@ def main(argv=None):
     print(f"{cfg.name}: {len(done)} requests, {toks} tokens, "
           f"{toks/dt:.1f} tok/s")
     print(json.dumps(eng.telemetry(), indent=2, default=float))
-    if args.trace:
+    if args.trace and hasattr(eng, "save_trace"):
         eng.save_trace(args.trace)
         print(f"trace -> {args.trace}")
+    elif args.trace:
+        print("trace: not supported with --multiproc (workers own their "
+              "ring buffers); recovery events land in telemetry instead")
+    if hasattr(eng, "shutdown"):
+        eng.shutdown()
 
 
 if __name__ == "__main__":

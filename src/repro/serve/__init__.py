@@ -9,7 +9,11 @@ MIGRATION.md):
   :class:`CacheConfig` / :class:`AdmissionConfig` / :class:`ObsConfig`
   groups) — the paged two-loop engine;
 * :class:`CubeRouter` — hash / least-loaded / prefix-affinity routing over
-  CUBE_AXIS replicas;
+  CUBE_AXIS replicas (in-process);
+* :class:`CubeProcRouter` / :class:`CubeProc` — the same routing surface
+  over one worker *process* per cube, with live straggler/dead-cube policy
+  and put-then-signal KV-page migration (see docs/architecture.md, "Cube
+  network");
 * :class:`Scheduler` / :class:`SchedulerConfig` — admission + preemption;
 * :class:`PagedKVCache` / :class:`PageAllocator` / :class:`PrefixIndex` /
   :class:`PrefixClaim` — the refcounted page pool and the prefix-sharing
@@ -20,6 +24,7 @@ MIGRATION.md):
   proven bit-exact against.
 """
 from .admission import AdmissionPipeline
+from .cube_proc import CubeProc, CubeProcRouter
 from .dense_engine import DenseSlotEngine
 from .engine import (
     AdmissionConfig,
@@ -43,6 +48,8 @@ __all__ = [
     "AdmissionConfig",
     "AdmissionPipeline",
     "CacheConfig",
+    "CubeProc",
+    "CubeProcRouter",
     "CubeRouter",
     "DenseSlotEngine",
     "EngineConfig",

@@ -1,0 +1,401 @@
+"""Multi-process cube serving: migration, shadows, fault policy, wire.
+
+The load-bearing invariants:
+
+* a request exported mid-decode from one engine and landed on another via
+  put-then-signal (``migrate_put`` → ``migrate_signal`` →
+  ``poll_migrations``) resumes from host-tier pages and finishes
+  token-identical to an uninterrupted run — on all four cache families
+  (attention, MLA, SSD, RG-LRU);
+* when the receiving engine has no host tier (or it is exhausted) the
+  migration degrades to the recompute-resume fresh path and identity still
+  holds (greedy determinism);
+* shadow checkpoints are non-destructive on the primary, and adopting one
+  on the backup reproduces the same tokens;
+* ``StragglerDetector`` timelines are deterministic under an injected
+  ``ManualClock`` (the ``time.time()`` holdout is gone) and ``forget``
+  retires a dead cube from its queries;
+* router-level multi-cube telemetry survives the ``obs.wire`` →
+  ``dist.collectives`` wire format round-trip (queue depths, swap and
+  migration counters);
+* with two real worker processes, ``CubeProcRouter`` reproduces the
+  single-engine token stream — including when one cube is SIGKILLed
+  mid-drive and its in-flight requests re-route and resume.
+"""
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.dist.collectives import wire_pack, wire_unpack
+from repro.dist.fault import StragglerDetector
+from repro.models import build_model
+from repro.models.common import AxisRules, DEFAULT_RULES
+from repro.obs import clock as obs_clock
+from repro.obs.clock import ManualClock
+from repro.obs.wire import unwire_snapshot, wire_snapshot
+from repro.serve import (
+    AdmissionConfig,
+    CacheConfig,
+    CubeProcRouter,
+    CubeRouter,
+    EngineConfig,
+    Request,
+    ServeEngine,
+)
+from repro.serve.cube_proc import pack_payload, unpack_payload
+
+RULES = AxisRules(DEFAULT_RULES)
+
+PAGED_FAMILIES = ["qwen2.5-3b", "deepseek-v3-671b", "mamba2-130m",
+                  "recurrentgemma-9b"]
+
+
+def _family_model(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(dataclasses.replace(cfg, decode_unroll_layers=False))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _ecfg(**cache):
+    kw = dict(page_size=4, n_pages=16, preempt_policy="swap",
+              swap_token_cost=0.0)
+    kw.update(cache)
+    # inline admission: fixed-step-count tests must see deterministic
+    # queue movement, not the async worker's wall-clock race
+    return EngineConfig(batch_slots=2, max_len=32, cache=CacheConfig(**kw),
+                        admission=AdmissionConfig(async_prefill=False))
+
+
+def _reqs(cfg, n=3, plen=7, max_new=10, seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=(plen,)).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _baseline(model, params, ecfg, cfg, **rkw):
+    eng = ServeEngine(model, params, ecfg, RULES)
+    for r in _reqs(cfg, **rkw):
+        eng.submit(r)
+    eng.run()
+    return {r.uid: list(r.out_tokens) for r in eng.completed}
+
+
+def _drain(eng):
+    while eng.load or eng.pending_migrations():
+        eng.step()
+    return {r.uid: list(r.out_tokens) for r in eng.completed}
+
+
+# ---------------------------------------------------------------------------
+# in-process migration: export → wire → put-then-signal → resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", PAGED_FAMILIES)
+def test_migrate_resume_token_identity_all_families(arch):
+    cfg, model, params = _family_model(arch)
+    want = _baseline(model, params, _ecfg(), cfg)
+
+    a = ServeEngine(model, params, _ecfg(), RULES)
+    b = ServeEngine(model, params, _ecfg(), RULES)
+    for r in _reqs(cfg):
+        a.submit(r)
+    for _ in range(6):                    # mid-decode: progress, nobody done
+        a.step()
+    moving = [u for u in a.inflight_uids()
+              if any(s.req.uid == u for s in a.sched.running.values())]
+    assert moving, "expected a running request to migrate"
+    uid = moving[0]
+
+    payload = a.export_request(uid)
+    assert payload is not None
+    assert payload["kind"] == "pages"     # swap_token_cost=0 forces pages
+    assert uid not in a.inflight_uids()
+    # the payload crosses the process boundary through the wire format
+    payload = unpack_payload(pack_payload(payload))
+    assert b.migrate_put("m0", payload) == "pages"
+    b.migrate_signal("m0")
+    assert b.pending_migrations() == 1
+
+    got = {**_drain(a), **_drain(b)}
+    assert got == want
+    assert b.telemetry()["migrations"]["resumed"] == 1
+    for eng in (a, b):                    # both pools round-trip to full
+        assert eng.cache.allocator.n_free == eng.cache.n_pages
+        assert eng.cache.host.allocator.n_free == eng.cache.host.n_pages
+
+
+def test_migrate_fresh_fallback_token_identity():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    want = _baseline(model, params, _ecfg(), cfg)
+
+    a = ServeEngine(model, params, _ecfg(), RULES)
+    # no host tier on the receiver: the pages payload must degrade to the
+    # recompute-resume fresh path, still token-identical under greedy
+    b = ServeEngine(model, params, _ecfg(preempt_policy="recompute"), RULES)
+    assert b.cache.host is None
+    for r in _reqs(cfg):
+        a.submit(r)
+    for _ in range(6):
+        a.step()
+    uid = next(u for u in a.inflight_uids()
+               if any(s.req.uid == u for s in a.sched.running.values()))
+    payload = unpack_payload(pack_payload(a.export_request(uid)))
+    assert payload["kind"] == "pages"
+    assert b.migrate_put("m0", payload) == "fresh"
+    b.migrate_signal("m0")
+
+    got = {**_drain(a), **_drain(b)}
+    assert got == want
+    assert b.telemetry()["migrations"]["fresh_fallbacks"] == 1
+
+
+def test_migrate_uncommitted_put_is_never_adopted():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    b = ServeEngine(model, params, _ecfg(), RULES)
+    a = ServeEngine(model, params, _ecfg(), RULES)
+    for r in _reqs(cfg):
+        a.submit(r)
+    for _ in range(6):
+        a.step()
+    uid = next(u for u in a.inflight_uids()
+               if any(s.req.uid == u for s in a.sched.running.values()))
+    b.migrate_put("m0", a.export_request(uid))
+    # sender "died" before the signal: the landed bytes stay invisible
+    assert b.pending_migrations() == 0
+    assert b.poll_migrations() == 0
+    assert b.load == 0
+    with pytest.raises(KeyError):
+        b.migrate_signal("missing-token")
+
+
+def test_export_request_absent_and_waiting():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    eng = ServeEngine(model, params, _ecfg(), RULES)
+    assert eng.export_request(99) is None
+    req = _reqs(cfg, n=1)[0]
+    eng.submit(req)                       # still waiting: fresh payload
+    payload = eng.export_request(req.uid)
+    assert payload["kind"] == "fresh"
+    assert eng.load == 0
+    assert np.array_equal(payload["prompt"], req.prompt)
+
+
+# ---------------------------------------------------------------------------
+# shadow checkpoints: non-destructive primary, adoptable backup
+# ---------------------------------------------------------------------------
+
+
+def test_shadow_checkpoint_nondestructive_and_adoptable():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    want = _baseline(model, params, _ecfg(), cfg)
+
+    a = ServeEngine(model, params, _ecfg(), RULES)
+    b = ServeEngine(model, params, _ecfg(), RULES)
+    for r in _reqs(cfg):
+        a.submit(r)
+    for _ in range(6):
+        a.step()
+    uid = next(u for u in a.inflight_uids()
+               if any(s.req.uid == u for s in a.sched.running.values()))
+    payload = a.checkpoint_request(uid)
+    assert payload is not None and payload["kind"] == "pages"
+    assert uid in a.inflight_uids()       # checkpoint never withdraws
+
+    b.shadow_put(uid, unpack_payload(pack_payload(payload)))
+    assert not b.adopt_shadow(uid)        # put landed, not yet committed
+    b.shadow_signal(uid)
+    assert b.adopt_shadow(uid)
+    assert not b.adopt_shadow(uid)        # consumed
+
+    # primary unaffected: finishes the full stream; backup reproduces it
+    assert _drain(a) == want
+    assert _drain(b)[uid] == want[uid]
+
+
+def test_drop_shadow_returns_host_pages():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    a = ServeEngine(model, params, _ecfg(), RULES)
+    b = ServeEngine(model, params, _ecfg(), RULES)
+    for r in _reqs(cfg):
+        a.submit(r)
+    for _ in range(6):
+        a.step()
+    uid = next(u for u in a.inflight_uids()
+               if any(s.req.uid == u for s in a.sched.running.values()))
+    free0 = b.cache.host.allocator.n_free
+    b.shadow_put(uid, a.checkpoint_request(uid))
+    b.shadow_signal(uid)
+    assert b.cache.host.allocator.n_free < free0
+    b.drop_shadow(uid)
+    assert b.cache.host.allocator.n_free == free0
+    b.drop_shadow(uid)                    # idempotent
+
+
+def test_inflight_uids_tracks_queues():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    eng = ServeEngine(model, params, _ecfg(), RULES)
+    assert eng.inflight_uids() == []
+    reqs = _reqs(cfg)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.inflight_uids() == [r.uid for r in reqs]
+    eng.run()
+    assert eng.inflight_uids() == []
+
+
+# ---------------------------------------------------------------------------
+# fault detector: injectable clock, forget
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detector_uses_injectable_clock():
+    clk = ManualClock()
+    obs_clock.set_source(clk)
+    try:
+        det = StragglerDetector(n_hosts=3, factor=2.0, timeout=10.0)
+        # hosts 0/1 report every second; host 2 manages two reports 5s
+        # apart — a 5x step time, flagged against the 1.0s median
+        for i in range(6):
+            det.report(0, i)
+            det.report(1, i)
+            if i in (0, 5):
+                det.report(2, i)
+            clk.advance(1.0)
+        assert det.stragglers() == [2]
+        clk.advance(20.0)                 # host 2 goes silent past timeout
+        det.report(0, 6)
+        det.report(1, 6)
+        assert det.dead(now=obs_clock.monotonic()) == [2]
+        det.forget(2)
+        assert det.dead(now=obs_clock.monotonic()) == []
+        assert det.stragglers() == []     # history gone with the cube
+    finally:
+        obs_clock.reset_source()
+
+
+def test_straggler_detector_explicit_clock_override():
+    t = {"now": 100.0}
+    det = StragglerDetector(n_hosts=2, timeout=5.0, clock=lambda: t["now"])
+    det.report(0, 1)
+    t["now"] = 112.0
+    det.report(1, 1)
+    assert det.dead(now=t["now"]) == [0]
+
+
+# ---------------------------------------------------------------------------
+# wire format: router-level multi-cube telemetry round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip_multicube_telemetry():
+    cfg, model, params = _family_model("qwen2.5-3b")
+    router = CubeRouter(model, params, _ecfg(), n_cubes=2,
+                        policy="least_loaded")
+    for r in _reqs(cfg, n=4):
+        router.submit(r)
+    router.run()
+    snap = router.telemetry()
+    wired = wire_snapshot(snap)
+    back = unwire_snapshot(wire_unpack(wire_pack(wired, "none")))
+    for cube in ("pod0", "pod1"):        # CUBE_AXIS names the slots
+        for key in ("queue_depth", "running", "routed", "steps"):
+            assert back[cube][key] == snap[cube][key]
+        # swap + migration counters ride the same tree
+        assert (back[cube]["host_tier"]["swap_outs"]
+                == snap[cube]["host_tier"]["swap_outs"])
+        assert back[cube]["migrations"]["pending"] == 0
+    assert back["total_routed"] == 4
+    # the compressed telemetry mode stays within bf16 error
+    lossy = unwire_snapshot(wire_unpack(wire_pack(wired, "bf16")))
+    assert lossy["total_routed"] == pytest.approx(4, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# the real thing: worker processes
+# ---------------------------------------------------------------------------
+
+_PROC_ECFG = EngineConfig(
+    batch_slots=2, max_len=32,
+    cache=CacheConfig(page_size=4, n_pages=16, preempt_policy="swap",
+                      swap_token_cost=0.0),
+    admission=AdmissionConfig(async_prefill=False),
+)
+
+
+def _proc_workload(cfg, n):
+    return _reqs(cfg, n=n, max_new=8)
+
+
+def _single_engine_tokens(n):
+    cfg, model, params = _family_model("qwen2.5-3b")
+    eng = ServeEngine(model, params, _PROC_ECFG, RULES)
+    for r in _proc_workload(cfg, n):
+        eng.submit(r)
+    eng.run()
+    return {r.uid: list(r.out_tokens) for r in eng.completed}
+
+
+def test_multiproc_two_cubes_token_identity():
+    want = _single_engine_tokens(4)
+    cfg = get_arch("qwen2.5-3b").reduced()
+    with CubeProcRouter("qwen2.5-3b", _PROC_ECFG, n_cubes=2,
+                        checkpoint_every=0) as router:
+        for r in _proc_workload(cfg, 4):
+            router.submit(r)
+        done = router.run(timeout=300.0)
+        snap = router.telemetry()
+    got = {r.uid: list(r.out_tokens) for r in done}
+    assert got == want
+    assert snap["total_routed"] == 4
+    assert all(router.routed[c] > 0 for c in range(2))   # both cubes worked
+    assert snap["dead_cubes"] == [] and snap["recoveries"] == 0
+    # per-cube engine telemetry crossed the wire intact
+    assert snap["pod0"]["steps"] > 0 and snap["pod1"]["steps"] > 0
+
+
+def test_multiproc_kill_cube_recovers_token_identical():
+    want = _single_engine_tokens(6)
+    cfg = get_arch("qwen2.5-3b").reduced()
+    with CubeProcRouter("qwen2.5-3b", _PROC_ECFG, n_cubes=2,
+                        checkpoint_every=2) as router:
+        for r in _proc_workload(cfg, 6):
+            router.submit(r)
+
+        victim = 0
+
+        def chaos():
+            # SIGKILL the victim once it has demonstrably decoded a few
+            # steps (so some requests are genuinely mid-flight on it)
+            deadline = time.monotonic() + 240.0
+            while time.monotonic() < deadline:
+                if router.detector._count.get(victim, 0) >= 3:
+                    router.kill_cube(victim)
+                    return
+                time.sleep(0.02)
+
+        killer = threading.Thread(target=chaos, daemon=True)
+        killer.start()
+        done = router.run(timeout=300.0)
+        killer.join(timeout=10.0)
+        assert not router.procs[victim].alive()
+        log = list(router.recovery_log)
+    got = {r.uid: list(r.out_tokens) for r in done}
+    assert got == want                    # survivor reproduces every stream
+    deaths = [e for e in log if e["event"] == "cube_dead"]
+    assert len(deaths) == 1 and deaths[0]["cube"] == victim
+    # every stranded request was accounted for, one way or the other
+    ev = deaths[0]
+    assert set(ev["adopted"]) | set(ev["resubmitted"]) == set(ev["stranded"])
+    assert ev["recovery_s"] >= 0.0
